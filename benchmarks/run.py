@@ -1,0 +1,52 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+The LM roofline table is produced separately by launch/dryrun.py (512
+virtual devices) and summarized by benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slower 1080p simulations")
+    ap.add_argument("--table", default=None,
+                    help="run a single table by name")
+    args = ap.parse_args(argv)
+
+    from . import paper_tables as T
+
+    tables = {
+        "memory_320p": lambda: T.memory_table("320p"),
+        "memory_1080p": lambda: T.memory_table("1080p"),
+        "power_320p": lambda: T.power_table("320p"),
+        "power_1080p": lambda: T.power_table("1080p"),
+        "throughput_320p": lambda: T.throughput_table("320p"),
+        "compile_speed": T.compile_speed_table,
+        "dse_pareto": T.dse_table,
+        "fpga_fit": T.multi_algorithm_fit,
+    }
+    if not args.fast:
+        tables["throughput_1080p"] = lambda: T.throughput_table("1080p")
+    if args.table:
+        tables = {args.table: tables[args.table]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for tname, fn in tables.items():
+        try:
+            for row in fn():
+                print(row)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{tname},0,ERROR={type(e).__name__}:{e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

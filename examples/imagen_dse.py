@@ -1,0 +1,45 @@
+"""Design-space exploration (paper Fig. 10): per-stage memory config sweep
+-> Pareto frontier, plotted per algorithm.
+
+    PYTHONPATH=src python examples/imagen_dse.py [--out dse.png]
+"""
+import argparse
+
+import matplotlib
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+
+from repro.core import algorithms, dse
+from repro.core.linebuffer import DP_SIZED, DPLC_SIZED
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="dse_pareto.png")
+    args = ap.parse_args()
+
+    fig, axes = plt.subplots(1, 2, figsize=(9, 4))
+    for ax, name in zip(axes, ["canny-m", "denoise-m"]):
+        dag = algorithms.ALGORITHMS[name]()
+        pts = dse.sweep(dag, 480, [DP_SIZED, DPLC_SIZED], max_points=300)
+        par = sorted((p for p in pts if p.pareto), key=lambda p: p.area)
+        ax.scatter([p.area / 1e6 for p in pts], [p.power for p in pts],
+                   s=12, alpha=0.4, label="designs")
+        ax.plot([p.area / 1e6 for p in par], [p.power for p in par],
+                "ro-", label="Pareto")
+        for p in par:
+            n_lc = sum(1 for v in p.combo.values() if v == "DPLC")
+            ax.annotate(f"{n_lc} LC", (p.area / 1e6, p.power), fontsize=7)
+        ax.set_title(f"{name}: {len(par)} Pareto designs")
+        ax.set_xlabel("area (rel.)")
+        ax.set_ylabel("power (rel.)")
+        ax.legend()
+        print(f"{name}: {len(pts)} designs, {len(par)} pareto-optimal "
+              f"(paper Fig. 10: frontier shape is algorithm-specific)")
+    fig.tight_layout()
+    fig.savefig(args.out, dpi=120)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

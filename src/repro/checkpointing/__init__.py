@@ -1,0 +1,3 @@
+from . import checkpoint
+from .supervisor import (HardwareFailure, Preemption, Supervisor,
+                         SupervisorConfig)

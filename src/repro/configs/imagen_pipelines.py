@@ -1,0 +1,9 @@
+"""The paper's own workloads as selectable configs (Tbl. 3 + Sec. 7)."""
+from repro.core import algorithms
+from repro.core.linebuffer import (DP, DPLC, FPGA_DP, FPGA_DPLC, FPGA_SP,
+                                   SP, MemConfig)
+
+PIPELINES = dict(algorithms.ALGORITHMS)
+RESOLUTIONS = dict(algorithms.RESOLUTIONS)
+MEMORIES = {"DP": DP, "SP": SP, "DPLC": DPLC,
+            "FPGA_DP": FPGA_DP, "FPGA_SP": FPGA_SP, "FPGA_DPLC": FPGA_DPLC}

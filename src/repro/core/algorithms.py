@@ -1,0 +1,288 @@
+"""Evaluation pipelines (paper Tbl. 3) + pure-jnp reference executor.
+
+Stage/MC counts match Tbl. 3 exactly (stage counts include the input and
+output stages, per the Darkroom-style DSL). The arithmetic payloads are
+representative stencil math (separable Gaussian, Sobel, Laplacian, NMS,
+unsharp, 18x1 cross-correlation) so functional tests are meaningful.
+
+Window convention (matches the scheduling model / simulator): the window
+for output pixel (r, x) covers rows r-sh+1..r and cols x-sw+1..x of each
+producer, with zero padding — i.e. bottom-right (causal) alignment.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax.numpy as jnp
+import numpy as np
+
+from .dag import PipelineDAG
+from .dsl import Pipeline
+
+
+# ------------------------------------------------------------- window fns
+def _single(wins):
+    (v,) = wins.values()
+    return v
+
+
+def conv_fn(weights: np.ndarray):
+    # unroll with python-float taps so Pallas kernel tracing inlines them
+    # as scalar literals instead of captured device constants
+    w = np.asarray(weights, dtype=np.float32)
+
+    def fn(wins):
+        win = _single(wins)
+        acc = None
+        for dy in range(w.shape[0]):
+            for dx in range(w.shape[1]):
+                term = float(w[dy, dx]) * win[..., dy, dx]
+                acc = term if acc is None else acc + term
+        return acc
+    return fn
+
+
+def square_fn(wins):
+    return _single(wins)[..., 0, 0] ** 2
+
+
+def identity_fn(wins):
+    return _single(wins)[..., 0, 0]
+
+
+def mag_fn(wins):
+    a, b = (wins[k][..., 0, 0] for k in sorted(wins))
+    return jnp.sqrt(a * a + b * b + 1e-6)
+
+
+def prod_fn(wins):
+    a, b = (wins[k][..., 0, 0] for k in sorted(wins))
+    return a * b
+
+
+def nms_fn(wins):
+    win = _single(wins)
+    center = win[..., -2, -2] if win.shape[-1] >= 2 else win[..., -1, -1]
+    mx = jnp.max(win, axis=(-2, -1))
+    return jnp.where(center >= mx, center, 0.0)
+
+
+def thresh_fn(wins, lo=0.1):
+    v = _single(wins)[..., 0, 0]
+    return jnp.where(v > lo, v, 0.0)
+
+
+def gauss1d(n: int) -> np.ndarray:
+    x = np.arange(n) - (n - 1) / 2
+    g = np.exp(-0.5 * (x / max(n / 4.0, 1.0)) ** 2)
+    return (g / g.sum()).astype(np.float32)
+
+
+SOBEL_X = np.array([[-1.0, 0.0, 1.0]], dtype=np.float32)          # 1x3
+SOBEL_Y = SOBEL_X.T                                               # 3x1
+LAPLACE = np.array([[0, 1, 0], [1, -4, 1], [0, 1, 0]], np.float32)
+G5H = gauss1d(5)[None, :]
+G5V = gauss1d(5)[:, None]
+G3 = np.outer(gauss1d(3), gauss1d(3)).astype(np.float32)
+XCORR_T = gauss1d(18)[:, None]                                    # 18x1
+
+
+def unsharp_fn(wins):
+    orig = wins["in"][..., 0, 0]
+    blur = [v for k, v in wins.items() if k != "in"][0][..., 0, 0]
+    return orig + 1.5 * (orig - blur)
+
+
+def xcorr_fn(wins):
+    tall = [v for v in wins.values() if v.shape[-2] == 18][0]
+    center = [v for v in wins.values() if v.shape[-2] == 1][0][..., 0, 0]
+    corr = None
+    for dy in range(18):  # scalar taps (Pallas-friendly, see conv_fn)
+        term = float(XCORR_T[dy, 0]) * tall[..., dy, 0]
+        corr = term if corr is None else corr + term
+    return corr - center
+
+
+def denoise_comb_fn(wins):
+    orig = wins["in"][..., 0, 0]
+    blur = wins["b"][..., 0, 0]
+    lap = wins["lap"][..., 0, 0]
+    edge_w = jnp.clip(jnp.abs(lap), 0.0, 1.0)
+    return edge_w * orig + (1.0 - edge_w) * blur
+
+
+def harris_resp_fn(wins):
+    v = _single(wins)[..., 0, 0]
+    return v - 0.04 * v * v
+
+
+# ------------------------------------------------------------- pipelines
+def canny_s() -> PipelineDAG:
+    """9 stages, 0 MC — linear chain."""
+    p = Pipeline("canny-s")
+    x = p.input("in")
+    bx = p.stage("bx", [(x, 1, 5)], conv_fn(G5H))
+    by = p.stage("by", [(bx, 5, 1)], conv_fn(G5V))
+    gx = p.stage("gx", [(by, 1, 3)], conv_fn(SOBEL_X))
+    gy = p.stage("gy", [(gx, 3, 1)], conv_fn(SOBEL_Y))
+    sq = p.stage("sq", [(gy, 1, 1)], square_fn)
+    nms = p.stage("nms", [(sq, 3, 3)], nms_fn)
+    th = p.stage("th", [(nms, 1, 1)], thresh_fn)
+    p.output("out", [(th, 1, 1)])
+    return p.build()
+
+
+def canny_m() -> PipelineDAG:
+    """10 stages, 1 MC — blurred image feeds both gradient directions."""
+    p = Pipeline("canny-m")
+    x = p.input("in")
+    bx = p.stage("bx", [(x, 1, 5)], conv_fn(G5H))
+    by = p.stage("by", [(bx, 5, 1)], conv_fn(G5V))       # MC stage
+    gx = p.stage("gx", [(by, 1, 3)], conv_fn(SOBEL_X))
+    gy = p.stage("gy", [(by, 3, 1)], conv_fn(SOBEL_Y))
+    mag = p.stage("mag", [(gx, 1, 1), (gy, 1, 1)], mag_fn)
+    nms = p.stage("nms", [(mag, 3, 3)], nms_fn)
+    hyst = p.stage("hyst", [(nms, 3, 3)], nms_fn)
+    th = p.stage("th", [(hyst, 1, 1)], thresh_fn)
+    p.output("out", [(th, 1, 1)])
+    return p.build()
+
+
+def harris_s() -> PipelineDAG:
+    """7 stages, 0 MC."""
+    p = Pipeline("harris-s")
+    x = p.input("in")
+    g = p.stage("g", [(x, 1, 3)], conv_fn(SOBEL_X))
+    g2 = p.stage("g2", [(g, 1, 1)], square_fn)
+    s = p.stage("s", [(g2, 3, 3)], conv_fn(G3))
+    r = p.stage("r", [(s, 1, 1)], harris_resp_fn)
+    nms = p.stage("nms", [(r, 3, 3)], nms_fn)
+    p.output("out", [(nms, 1, 1)])
+    return p.build()
+
+
+def harris_m() -> PipelineDAG:
+    """7 stages, 1 MC — the input feeds both gradient directions."""
+    p = Pipeline("harris-m")
+    x = p.input("in")                                    # MC stage
+    gx = p.stage("gx", [(x, 1, 3)], conv_fn(SOBEL_X))
+    gy = p.stage("gy", [(x, 3, 1)], conv_fn(SOBEL_Y))
+    ixy = p.stage("ixy", [(gx, 1, 1), (gy, 1, 1)], prod_fn)
+    s = p.stage("s", [(ixy, 3, 3)], conv_fn(G3))
+    r = p.stage("r", [(s, 1, 1)], harris_resp_fn)
+    p.output("out", [(r, 1, 1)])
+    return p.build()
+
+
+def unsharp_m() -> PipelineDAG:
+    """5 stages, 1 MC — classic unsharp mask (paper Sec. 1, 3.1)."""
+    p = Pipeline("unsharp-m")
+    x = p.input("in")                                    # MC stage
+    bx = p.stage("bx", [(x, 1, 5)], conv_fn(G5H))
+    by = p.stage("by", [(bx, 5, 1)], conv_fn(G5V))
+    sh = p.stage("sharp", [(x, 1, 1), (by, 1, 1)], unsharp_fn)
+    p.output("out", [(sh, 1, 1)])
+    return p.build()
+
+
+def xcorr_m() -> PipelineDAG:
+    """3 stages, 1 MC — 18x1 template correlation (paper Sec. 8.3)."""
+    p = Pipeline("xcorr-m")
+    x = p.input("in")                                    # MC stage
+    xc = p.stage("xc", [(x, 18, 1), (x, 1, 1)], xcorr_fn)
+    p.output("out", [(xc, 1, 1)])
+    return p.build()
+
+
+def denoise_m() -> PipelineDAG:
+    """5 stages, 2 MC — edge-aware blend."""
+    p = Pipeline("denoise-m")
+    x = p.input("in")                                    # MC stage 1
+    b = p.stage("b", [(x, 3, 3)], conv_fn(G3))           # MC stage 2
+    lap = p.stage("lap", [(b, 3, 3)], conv_fn(LAPLACE))
+    comb = p.stage("comb", [(x, 1, 1), (b, 1, 1), (lap, 1, 1)],
+                   denoise_comb_fn)
+    p.output("out", [(comb, 1, 1)])
+    return p.build()
+
+
+ALGORITHMS = {
+    "canny-s": canny_s, "canny-m": canny_m,
+    "harris-s": harris_s, "harris-m": harris_m,
+    "unsharp-m": unsharp_m, "xcorr-m": xcorr_m, "denoise-m": denoise_m,
+}
+
+# Paper Sec. 7: 320p = 480x320, 1080p = 1920x1080 (W x H)
+RESOLUTIONS = {"320p": (480, 320), "1080p": (1920, 1080)}
+
+
+def synthetic_pipeline(n_stages: int, mc_fraction: float = 1 / 3,
+                       seed: int = 0) -> PipelineDAG:
+    """Random chains with MC branches for the Sec. 8.2 scalability sweep."""
+    rng = np.random.RandomState(seed)
+    p = Pipeline(f"synth-{n_stages}")
+    prev = p.input("in")
+    budget = n_stages - 3            # minus input, final join, output
+    n_mc = max(1, int(n_stages * mc_fraction))
+    pending = []   # side branches waiting to re-join
+    i = 0
+    side_spent = 0
+    while i + side_spent < budget:
+        i += 1
+        reads = [(prev, int(rng.choice([1, 3])), int(rng.choice([1, 3])))]
+        if pending and rng.rand() < 0.5:
+            side = pending.pop()
+            reads.append((side, 1, 1))
+        cur = p.stage(f"k{i}", reads, identity_fn)
+        if side_spent < n_mc and i + side_spent + 1 < budget and rng.rand() < 0.6:
+            side = p.stage(f"k{i}b", [(prev, 3, 1)], identity_fn)
+            pending.append(side)
+            side_spent += 1
+        prev = cur
+    # drain leftover branches into the final stage
+    reads = [(prev, 1, 1)] + [(s, 1, 1) for s in pending]
+    last = p.stage("klast", reads, identity_fn)
+    p.output("out", [(last, 1, 1)])
+    return p.build()
+
+
+# -------------------------------------------------------- reference exec
+def _windows(img: jnp.ndarray, sh: int, sw: int) -> jnp.ndarray:
+    """(H, W) -> (H, W, sh, sw) bottom-right-aligned windows, zero padded."""
+    h, w = img.shape[-2], img.shape[-1]
+    pad = jnp.pad(img, [(sh - 1, 0), (sw - 1, 0)])
+    cols = []
+    for dy in range(sh):
+        row = []
+        for dx in range(sw):
+            row.append(pad[dy:dy + h, dx:dx + w])
+        cols.append(jnp.stack(row, axis=-1))
+    return jnp.stack(cols, axis=-2)
+
+
+def execute_reference(dag: PipelineDAG, inputs: dict[str, jnp.ndarray]
+                      ) -> dict[str, jnp.ndarray]:
+    """Pure-jnp oracle: run every stage over full images, topo order."""
+    vals: dict[str, jnp.ndarray] = {}
+    for name in dag.topo_order:
+        st = dag.stages[name]
+        if st.is_input:
+            vals[name] = jnp.asarray(inputs[name], dtype=jnp.float32)
+            continue
+        ins = dag.in_edges(name)
+        if st.fn is None:  # relay or output: identity on single producer
+            vals[name] = vals[ins[0].producer]
+            continue
+        wins = {e.producer: _windows(vals[e.producer], e.sh, e.sw)
+                for e in ins}
+        # a stage reading two windows from one producer: key by producer
+        # only works when shapes differ; keep the larger under the name and
+        # the 1x1 under name as well -> disambiguate by collecting per edge
+        if len({e.producer for e in ins}) != len(ins):
+            wins = {}
+            for e in ins:
+                key = e.producer if e.producer not in wins else f"{e.producer}#{e.sh}x{e.sw}"
+                wins[key] = _windows(vals[e.producer], e.sh, e.sw)
+        vals[name] = st.fn(wins)
+    return vals

@@ -1,0 +1,111 @@
+"""Plan code generation (paper Sec. 4 "RTL Code Generation", adapted).
+
+The paper emits synthesizable Verilog; it calls that step "a mechanical
+translation ... not a contribution". Our backend targets are (i) the
+cycle-accurate simulator and (ii) the fused Pallas stencil executor, so
+codegen produces a :class:`PipelinePlan` — the complete static description
+of the accelerator: stage schedule, ring-buffer sizes, block layout,
+accessor maps — plus a human-readable pseudo-RTL dump for inspection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from .dag import PipelineDAG
+from .ilp import Schedule, build_problem, solve_schedule
+from .linebuffer import DP, Allocation, MemConfig, allocate
+from .power import memory_area, memory_power
+from .simulate import SimReport, simulate
+
+
+@dataclasses.dataclass
+class PipelinePlan:
+    dag: PipelineDAG
+    w: int
+    schedule: Schedule
+    alloc: Allocation
+    mem_cfg: dict[str, MemConfig]
+
+    @property
+    def total_alloc_bits(self) -> int:
+        return self.alloc.total_alloc_bits
+
+    @property
+    def power(self) -> float:
+        return memory_power(self.alloc)
+
+    @property
+    def area(self) -> float:
+        return memory_area(self.alloc)
+
+    def verify(self, h: int) -> SimReport:
+        return simulate(self.dag, self.schedule, self.w, h,
+                        alloc=self.alloc, cfg_of=self.mem_cfg)
+
+    def pseudo_rtl(self) -> str:
+        """Textual dump in the spirit of the generated Verilog."""
+        lines = [f"// pipeline {self.dag.name}  W={self.w}",
+                 f"// schedule: {self.schedule.starts}"]
+        for p, b in self.alloc.buffers.items():
+            lines.append(
+                f"linebuffer {p}: lines={b.n_lines_phys} (logical "
+                f"{b.n_lines}) pack={b.pack} blocks={b.n_blocks} x "
+                f"{b.bits_per_block}b ports={b.cfg.ports} "
+                f"regs={b.window_regs}")
+        for s in self.dag.topo_order:
+            st = self.dag.stages[s]
+            kind = ("input" if st.is_input else
+                    "output" if st.is_output else "stage")
+            reads = ", ".join(f"{e.producer}[{e.sh}x{e.sw}]"
+                              for e in self.dag.in_edges(s))
+            lines.append(f"{kind} {s} @ S={self.schedule.starts[s]}"
+                         + (f" reads {reads}" if reads else ""))
+        return "\n".join(lines)
+
+
+def compile_pipeline(dag: PipelineDAG, w: int,
+                     mem: MemConfig | Mapping[str, MemConfig] = DP,
+                     objective: str = "exact",
+                     prune: bool = True,
+                     max_pad_iters: int = 8) -> PipelinePlan:
+    """Front door: DAG + memory spec -> scheduled, allocated plan.
+
+    After scheduling, the allocation is validated by the cycle-accurate
+    simulator; buffers whose minimal ring aliases the writer's block with
+    the oldest consumer's reads (a corner the paper's logical-line model
+    misses — see simulate.py) get their ring padded by one slot group at a
+    time until the simulation is clean. The schedule never changes.
+    """
+    if isinstance(mem, MemConfig):
+        cfg_of = {s: mem for s in dag.stages}
+    else:
+        cfg_of = dict(mem)
+        for s in dag.stages:
+            cfg_of.setdefault(s, DP)
+    prob = build_problem(dag, w, mem_cfg=cfg_of, prune=prune)
+    sched = solve_schedule(prob, objective=objective)
+
+    extra: dict[str, int] = {}
+    for _ in range(max_pad_iters):
+        alloc = allocate(dag, sched, cfg_of, w, extra_lines=extra)
+        max_n = max((b.n_lines_phys for b in alloc.buffers.values()),
+                    default=1)
+        max_sh = max((e.sh for e in dag.edges), default=1)
+        h_probe = 3 * (max_n + max_sh) + 4
+        rep = simulate(dag, sched, w, h_probe, alloc=alloc, cfg_of=cfg_of)
+        if rep.ok:
+            break
+        progressed = False
+        for p in rep.bad_buffers:
+            if p in alloc.buffers:
+                extra[p] = extra.get(p, 0) + alloc.buffers[p].pack
+                progressed = True
+        if not progressed:
+            raise ValueError(f"{dag.name}: simulation violations not "
+                             f"attributable to ring size: {rep.violations}")
+    else:
+        raise ValueError(f"{dag.name}: ring padding did not converge: "
+                         f"{rep.violations}")
+    return PipelinePlan(dag=dag, w=w, schedule=sched, alloc=alloc,
+                        mem_cfg=cfg_of)

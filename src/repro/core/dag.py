@@ -1,0 +1,142 @@
+"""Pipeline DAG intermediate representation (paper Sec. 4).
+
+A pipeline is a DAG of stencil stages. Each node is a stage; each edge
+connects a producer to a consumer and carries the stencil window shape
+(SH, SW) the consumer reads from that producer. Stencil sizes are encoded
+on edges (not nodes) because a consumer may read different windows from
+different producers (paper footnote 1).
+
+The compute payload of a stage is a vectorized window function used by both
+the pure-jnp reference executor and the Pallas fused kernel; the scheduler
+itself only ever looks at the graph structure and stencil heights.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Edge:
+    """Producer -> consumer edge with stencil window (SH, SW)."""
+    producer: str
+    consumer: str
+    sh: int  # stencil height
+    sw: int  # stencil width
+
+    def __post_init__(self):
+        if self.sh < 1 or self.sw < 1:
+            raise ValueError(f"stencil must be >=1x1, got {self.sh}x{self.sw}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One pipeline stage.
+
+    ``fn`` maps a dict {producer_name: window array [..., SH, SW]} to the
+    output pixel value(s) with matching leading batch dims. ``fn=None`` is a
+    pure relay (identity on a 1x1 window) used by Darkroom linearization.
+    """
+    name: str
+    fn: Callable[[Mapping[str, "jax.Array"]], "jax.Array"] | None = None
+    is_input: bool = False
+    is_output: bool = False
+
+
+class PipelineDAG:
+    """Immutable-ish DAG with helper queries used throughout the compiler."""
+
+    def __init__(self, name: str, stages: Sequence[Stage], edges: Sequence[Edge]):
+        self.name = name
+        self.stages: dict[str, Stage] = {}
+        for s in stages:
+            if s.name in self.stages:
+                raise ValueError(f"duplicate stage {s.name}")
+            self.stages[s.name] = s
+        self.edges: list[Edge] = list(edges)
+        for e in self.edges:
+            if e.producer not in self.stages or e.consumer not in self.stages:
+                raise ValueError(f"edge {e} references unknown stage")
+        self._toposort()
+        self._reach = self._reachability()
+
+    # ------------------------------------------------------------------ graph
+    def _toposort(self) -> None:
+        indeg = {n: 0 for n in self.stages}
+        for e in self.edges:
+            indeg[e.consumer] += 1
+        ready = [n for n, d in indeg.items() if d == 0]
+        order: list[str] = []
+        consumers = self.consumers_of
+        while ready:
+            n = ready.pop()
+            order.append(n)
+            for e in self.out_edges(n):
+                indeg[e.consumer] -= 1
+                if indeg[e.consumer] == 0:
+                    ready.append(e.consumer)
+        if len(order) != len(self.stages):
+            raise ValueError(f"pipeline {self.name} has a cycle")
+        self.topo_order = order
+
+    def _reachability(self) -> dict[str, frozenset[str]]:
+        """reach[n] = set of nodes reachable from n (excluding n)."""
+        reach: dict[str, set[str]] = {n: set() for n in self.stages}
+        for n in reversed(self.topo_order):
+            for e in self.out_edges(n):
+                reach[n].add(e.consumer)
+                reach[n] |= reach[e.consumer]
+        return {k: frozenset(v) for k, v in reach.items()}
+
+    # ----------------------------------------------------------------- queries
+    def out_edges(self, name: str) -> list[Edge]:
+        return [e for e in self.edges if e.producer == name]
+
+    def in_edges(self, name: str) -> list[Edge]:
+        return [e for e in self.edges if e.consumer == name]
+
+    def consumers_of(self, name: str) -> list[str]:
+        return [e.consumer for e in self.out_edges(name)]
+
+    def producers_of(self, name: str) -> list[str]:
+        return [e.producer for e in self.in_edges(name)]
+
+    def input_stages(self) -> list[str]:
+        return [n for n, s in self.stages.items() if s.is_input]
+
+    def output_stages(self) -> list[str]:
+        return [n for n, s in self.stages.items() if s.is_output]
+
+    def depends(self, a: str, b: str) -> bool:
+        """Partial order: a <= b (b is a or downstream of a)."""
+        return a == b or b in self._reach[a]
+
+    def multi_consumer_stages(self) -> list[str]:
+        """Stages with >1 *distinct access pattern* consumer edges.
+
+        Per the paper (Fig. 3), consumers reading in exactly the same pattern
+        act as one. Two out-edges with identical (sh, sw) still contend at
+        the port level only once for scheduling purposes if their consumers
+        share a start cycle; for counting MC stages we follow Tbl. 3 and use
+        distinct consumer stages.
+        """
+        return [n for n in self.stages if len(self.out_edges(n)) > 1]
+
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    def validate(self) -> None:
+        for n, s in self.stages.items():
+            ins, outs = self.in_edges(n), self.out_edges(n)
+            if s.is_input and ins:
+                raise ValueError(f"input stage {n} has in-edges")
+            if not s.is_input and not ins:
+                raise ValueError(f"non-input stage {n} has no producers")
+            if s.is_output and outs:
+                raise ValueError(f"output stage {n} has out-edges")
+            if not s.is_output and not outs:
+                raise ValueError(f"non-output stage {n} has no consumers")
+
+    def __repr__(self) -> str:
+        return (f"PipelineDAG({self.name}, stages={len(self.stages)}, "
+                f"edges={len(self.edges)}, mc={len(self.multi_consumer_stages())})")

@@ -1,0 +1,57 @@
+"""Design space exploration (paper Sec. 8.5, Fig. 10).
+
+Sweeps per-stage memory configurations (DP vs DPLC by default) over the
+cartesian product, compiles the optimal design for each combination and
+extracts the Pareto frontier of (area, power). The paper's observation —
+that the frontier shape is algorithm-specific — is reproduced by the
+benchmarks driving this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+from .codegen import PipelinePlan, compile_pipeline
+from .dag import PipelineDAG
+from .linebuffer import MemConfig
+
+
+@dataclasses.dataclass
+class DsePoint:
+    combo: dict[str, str]        # stage -> cfg name
+    area: float
+    power: float
+    alloc_bits: int
+    pareto: bool = False
+
+
+def sweep(dag: PipelineDAG, w: int, options: Sequence[MemConfig],
+          max_points: int = 4096) -> list[DsePoint]:
+    owners = [p for p in dag.topo_order
+              if any(not dag.stages[e.consumer].is_output
+                     for e in dag.out_edges(p))]
+    combos = itertools.product(options, repeat=len(owners))
+    points: list[DsePoint] = []
+    for i, choice in enumerate(combos):
+        if i >= max_points:
+            break
+        cfg_of = dict(zip(owners, choice))
+        try:
+            plan = compile_pipeline(dag, w, mem=cfg_of)
+        except ValueError:
+            continue  # infeasible under this memory mix
+        points.append(DsePoint(
+            combo={p: c.name for p, c in cfg_of.items()},
+            area=plan.area, power=plan.power,
+            alloc_bits=plan.total_alloc_bits))
+    mark_pareto(points)
+    return points
+
+
+def mark_pareto(points: list[DsePoint]) -> None:
+    for p in points:
+        p.pareto = not any(
+            (q.area <= p.area and q.power <= p.power and
+             (q.area < p.area or q.power < p.power))
+            for q in points)

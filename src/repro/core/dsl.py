@@ -1,0 +1,59 @@
+"""Darkroom-like DSL front end (paper Sec. 4, "Front End").
+
+The paper deliberately reuses existing DSL ideas; ours is a tiny embedded
+builder that parses to the :class:`PipelineDAG` IR. Example::
+
+    p = Pipeline("unsharp")
+    x   = p.input("in")
+    bx  = p.stage("blurx", reads=[(x, 1, 5)], fn=conv_fn(gauss1d_h))
+    by  = p.stage("blury", reads=[(bx, 5, 1)], fn=conv_fn(gauss1d_v))
+    out = p.stage("sharp", reads=[(x, 1, 1), (by, 1, 1)], fn=unsharp_fn)
+    p.output("out", reads=[(out, 1, 1)])
+    dag = p.build()
+
+Stage ``fn`` signatures are vectorized window functions; see dag.Stage.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+from .dag import Edge, PipelineDAG, Stage
+
+
+class Ref:
+    """Handle to a declared stage, usable as a read target."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self):
+        return f"Ref({self.name})"
+
+
+class Pipeline:
+    def __init__(self, name: str):
+        self.name = name
+        self._stages: list[Stage] = []
+        self._edges: list[Edge] = []
+
+    def input(self, name: str) -> Ref:
+        self._stages.append(Stage(name=name, fn=None, is_input=True))
+        return Ref(name)
+
+    def stage(self, name: str, reads: Sequence[tuple[Ref, int, int]],
+              fn: Callable | None) -> Ref:
+        self._stages.append(Stage(name=name, fn=fn))
+        for (ref, sh, sw) in reads:
+            self._edges.append(Edge(producer=ref.name, consumer=name, sh=sh, sw=sw))
+        return Ref(name)
+
+    def output(self, name: str, reads: Sequence[tuple[Ref, int, int]]) -> Ref:
+        self._stages.append(Stage(name=name, fn=None, is_output=True))
+        for (ref, sh, sw) in reads:
+            self._edges.append(Edge(producer=ref.name, consumer=name, sh=sh, sw=sw))
+        return Ref(name)
+
+    def build(self) -> PipelineDAG:
+        dag = PipelineDAG(self.name, self._stages, self._edges)
+        dag.validate()
+        return dag

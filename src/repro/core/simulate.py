@@ -1,0 +1,150 @@
+"""Cycle-accurate line-buffered pipeline simulator (paper Sec. 7, 8.1).
+
+Plays a solved schedule against a W x H frame and verifies the three
+no-stall requirements of Sec. 5.1 at *physical block* granularity:
+
+  R1 (causality)  — a pixel is read only after it was written;
+  R2 (no off-chip) — a ring slot is overwritten only after its last read;
+  R3 (ports)      — accesses to any physical block at any cycle <= P.
+
+Physical semantics (floor, not the paper's ceil — see contention.py note):
+at cycle t >= S, an accessor sweeps column (t - S) mod W of lines
+[L, L+sh-1] with L = (t - S) // W; a writer writes line L. Lines map to
+ring slots l mod n_phys; coalescing packs `pack` consecutive slots per
+physical block.
+
+This slot-granular check exposes a corner the paper's logical-line model
+misses: a ring of n slots aliases line l with line l+n, so the oldest
+consumer's reads share a *block* with the writer (and any reader tracking
+the writer) for (delay mod W) cycles per line — 3 accesses on one block
+even though no logical line ever sees more than 2. codegen.py closes the
+gap by padding the ring (extra slots) until this simulator is clean; the
+schedule itself never changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping
+
+import numpy as np
+
+from .dag import PipelineDAG
+from .ilp import Schedule
+from .linebuffer import Allocation, MemConfig
+
+
+@dataclasses.dataclass
+class SimReport:
+    ok: bool
+    violations: list[str]
+    bad_buffers: dict[str, int]           # buffer -> worst per-block count
+    latency_cycles: int                   # cycle of last output pixel + 1
+    output_start: int
+    throughput: float                     # output px/cycle once started
+    peak_block_accesses: dict[str, int]
+    accesses_per_cycle: dict[str, float]  # steady-state mean (power xcheck)
+
+
+def _buffer_check(w: int, h: int, n_phys: int, pack: int, ports: int,
+                  s_p: int, readers: list[tuple[int, int, str]],
+                  owner: str) -> tuple[list[str], int, float]:
+    """Vectorized R3 check for one buffer. Returns (violations, peak, mean).
+
+    With coalescing (pack > 1) blocks hold C lines as wide words, so an
+    accessor contributes *one* access per block it touches per cycle
+    (unit load), however many of the block's lines fall in its window.
+    """
+    accessors = [(s_p, 1)] + [(s, sh) for (s, sh, _) in readers]
+    max_sh = max(sh for _, sh in accessors)
+    t_lo = min(s for s, _ in accessors)
+    span = min(w * h, 3 * w * (max_sh + n_phys) + 4 * w)
+    t_hi = max(s for s, _ in accessors) + span
+    T = t_hi - t_lo
+    n_groups = max(1, math.ceil(n_phys / pack))
+    counts = np.zeros((T, n_groups), dtype=np.int16)
+    t = np.arange(t_lo, t_hi)
+    touched = np.zeros((T, n_groups), dtype=bool)
+    for (s, sh) in accessors:
+        active = (t >= s) & (t < s + w * h)
+        if not active.any():
+            continue
+        base = (t - s) // w
+        touched[:] = False
+        for k in range(sh):
+            line = base + k
+            ok = active & (line >= 0) & (line < h)
+            grp = (line[ok] % n_phys) // pack
+            touched[np.nonzero(ok)[0], grp] = True
+        counts += touched.astype(np.int16)
+    peak = int(counts.max()) if counts.size else 0
+    mean = float(counts.sum() / max((counts.sum(axis=1) > 0).sum(), 1))
+    violations = []
+    if peak > ports:
+        bad_t, bad_g = np.nonzero(counts > ports)
+        i = 0
+        violations.append(
+            f"{owner}: R3 violated at t={int(bad_t[i]) + t_lo}: "
+            f"{int(counts[bad_t[i], bad_g[i]])} accesses > P={ports} "
+            f"on block {int(bad_g[i])} ({len(bad_t)} offending cycles)")
+    return violations, peak, mean
+
+
+def simulate(dag: PipelineDAG, sched: Schedule, w: int, h: int,
+             alloc: Allocation | None = None,
+             cfg_of: Mapping[str, MemConfig] | None = None) -> SimReport:
+    violations: list[str] = []
+    bad: dict[str, int] = {}
+    peak: dict[str, int] = {}
+    mean_acc: dict[str, float] = {}
+
+    for p, n_lines in sched.buffer_lines.items():
+        cfg = cfg_of[p] if cfg_of else None
+        pack = cfg.pack_factor(w) if (cfg and cfg.coalesce) else 1
+        ports = cfg.ports if cfg else 2
+        if alloc is not None and p in alloc.buffers:
+            n_phys = alloc.buffers[p].n_lines_phys
+            pack = alloc.buffers[p].pack
+            ports = alloc.buffers[p].cfg.ports
+        else:
+            n_phys = int(math.ceil(n_lines / pack) * pack)
+        s_p = sched.starts[p]
+        sh_of: dict[str, int] = {}
+        for e in dag.out_edges(p):
+            if dag.stages[e.consumer].is_output:
+                continue
+            sh_of[e.consumer] = max(sh_of.get(e.consumer, 0), e.sh)
+        readers = [(sched.starts[c], sh, c) for c, sh in sorted(sh_of.items())]
+        if not readers:
+            continue
+
+        # --- R2: ring slot never overwritten before its last read --------
+        max_delay = max(s_c - s_p for (s_c, _, _) in readers)
+        if n_phys * w < max_delay + 1:
+            violations.append(
+                f"{p}: R2 ring too small: {n_phys} lines * W={w} "
+                f"<= max consumer delay {max_delay}")
+            bad[p] = max(bad.get(p, 0), 99)
+
+        # --- R1: causality -------------------------------------------------
+        for (s_c, sh, cname) in readers:
+            if s_c - s_p < (sh - 1) * w + 1:
+                violations.append(
+                    f"{p}->{cname}: R1 violated: delay {s_c - s_p} < "
+                    f"{(sh - 1) * w + 1}")
+
+        # --- R3: per-block port bound (vectorized) -------------------------
+        v, pk, mean = _buffer_check(w, h, n_phys, pack, ports, s_p, readers, p)
+        violations.extend(v)
+        if v:
+            bad[p] = pk
+        peak[p] = pk
+        mean_acc[p] = mean
+
+    out = dag.output_stages()[0]
+    out_start = sched.starts[out]
+    latency = out_start + w * h
+    return SimReport(ok=not violations, violations=violations, bad_buffers=bad,
+                     latency_cycles=latency, output_start=out_start,
+                     throughput=1.0, peak_block_accesses=peak,
+                     accesses_per_cycle=mean_acc)

@@ -1,0 +1,188 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Meshes (launch/mesh.py): single-pod ('data','model') = (16,16); multi-pod
+('pod','data','model') = (2,16,16). 'pod' is pure DP across pods.
+
+Parameter rules (FSDP + TP):
+  vocab      -> 'model'   (vocab-parallel embedding / lm head)
+  embed      -> 'data'    (FSDP: d_model dim sharded over the DP axis;
+                           XLA all-gathers weights around their use)
+  heads      -> 'model'   (Megatron head-parallel attention)
+  kv_heads   -> 'model' when n_kv % tp == 0 else replicated (GQA with few
+                           KV heads: replicate KV projections)
+  mlp        -> 'model'   (Megatron column/row parallel FFN)
+  expert     -> 'model' when n_experts % tp == 0 (EP; granite-moe 32/16)
+                else None (mixtral 8: TP-inside-expert via 'mlp')
+  heads_flat -> 'model'   (RWKV fused d->d projections)
+
+Activation rules:
+  batch      -> ('pod','data'); sequence sharded over 'model' ("context
+  parallelism") for decode caches whose kv heads cannot use 'model', and
+  over ('data','model') for the batch=1 long-context cells.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.models.transformer import Model
+
+
+def _tp(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, fsdp: bool = True,
+              moe_tp: bool = False) -> dict:
+    tp = _tp(mesh)
+    return {
+        "vocab": "model",
+        "embed": "data" if fsdp else None,
+        "heads": "model" if cfg.n_heads % tp == 0 else None,
+        "kv_heads": "model" if cfg.n_kv_heads % tp == 0 else None,
+        "head_dim": None,
+        "mlp": "model" if cfg.d_ff % tp == 0 else None,
+        # moe_tp: replicate experts, shard inside them (d_ff over 'model')
+        # — kills the EP dispatch all-to-alls at the price of expert
+        # weight replication (only sensible for small-expert models)
+        "expert": ("model" if (cfg.n_experts and cfg.n_experts % tp == 0
+                               and not moe_tp) else None),
+        "heads_flat": "model" if cfg.d_model % tp == 0 else None,
+        None: None,
+    }
+
+
+def param_specs(model: Model, params_shape: Any, mesh: Mesh,
+                fsdp: bool = True, moe_tp: bool = False) -> Any:
+    """PartitionSpec tree matching params: stack dims -> None, trailing
+    dims mapped through the logical-axis rules."""
+    rules = rules_for(model.cfg, mesh, fsdp, moe_tp)
+    axes = model.logical_axes(params_shape)
+
+    def leaf_spec(leaf, ax):
+        rank = len(leaf.shape)
+        ax = tuple(ax)
+        prefix = (None,) * (rank - len(ax))
+        mapped = tuple(rules.get(a) for a in ax)
+        # drop shard axes that do not divide the dim, and deduplicate mesh
+        # axes (e.g. EP puts 'model' on the expert dim — the mlp dim must
+        # then stay unsharded)
+        out, used = [], set()
+        for dim, m in zip(leaf.shape[rank - len(ax):], mapped):
+            if m is not None and (dim % mesh.shape[m] != 0 or m in used):
+                m = None
+            if m is not None:
+                used.add(m)
+            out.append(m)
+        return P(*(prefix + tuple(out)))
+
+    flat_p, treedef = jax.tree.flatten(params_shape)
+    flat_ax = _flatten_axes(axes, params_shape)
+    return jax.tree.unflatten(treedef,
+                              [leaf_spec(l, a)
+                               for l, a in zip(flat_p, flat_ax)])
+
+
+def _flatten_axes(axes_tree: Any, params_tree: Any) -> list:
+    """Flatten the axes tree in the same leaf order as params.
+
+    axes leaves are *tuples of axis names*, which jax.tree would recurse
+    into; walk manually, treating tuples-of-(str|None) as leaves.
+    """
+    out: list = []
+
+    def walk(ax, p):
+        if isinstance(ax, dict):
+            for k in p:  # follow params ordering
+                walk(ax[k], p[k])
+        elif isinstance(ax, (list,)) and isinstance(p, (list,)):
+            for a, q in zip(ax, p):
+                walk(a, q)
+        elif isinstance(ax, tuple) and all(
+                x is None or isinstance(x, str) for x in ax):
+            out.append(ax)
+        else:  # tuple used as a container
+            for a, q in zip(ax, p):
+                walk(a, q)
+
+    walk(axes_tree, params_tree)
+    return out
+
+
+def state_specs(model: Model, state_shape: Any, mesh: Mesh,
+                fsdp: bool = True, moe_tp: bool = False) -> Any:
+    """Specs for the full train state {params, opt{step,master,m,v}}."""
+    pspec = param_specs(model, state_shape["params"], mesh, fsdp, moe_tp)
+    return {
+        "params": pspec,
+        "opt": {
+            "step": P(),
+            "master": pspec,
+            "m": pspec,
+            "v": pspec,
+        },
+    }
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
+    dp = dp_axes(mesh)
+
+    def spec(leaf):
+        rank = len(leaf.shape)
+        if rank == 0:
+            return P()
+        b = leaf.shape[0]
+        if b == 3 and rank == 3:   # mrope positions (3, B, S)
+            return P(None, dp, *([None] * (rank - 2)))
+        if b % int(np.prod([mesh.shape[a] for a in dp])) == 0:
+            return P(dp, *([None] * (rank - 1)))
+        return P(*([None] * rank))
+    return jax.tree.map(spec, batch_shape)
+
+
+def cache_specs(model: Model, cache_shape: Any, mesh: Mesh) -> Any:
+    """Decode-cache sharding: batch over DP when divisible; the cache
+    sequence dim over 'model' when kv heads can't use it (context
+    parallel); for batch=1 long-context also over 'data'."""
+    cfg = model.cfg
+    tp = _tp(mesh)
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    kv_on_model = cfg.n_kv_heads % tp == 0
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        rank = len(shape)
+        if rank < 2:
+            return P(*([None] * rank))
+        b = shape[1]  # (n_layers, B, ...)
+        batch_ax = dp if (b % dp_size == 0 and b >= dp_size) else None
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in ("k", "v") and rank == 5:  # attn cache (n,B,S,kv,hd)
+            if kv_on_model:
+                return P(None, batch_ax, None, "model", None)
+            s = shape[2]
+            if batch_ax is None and s % (dp_size * tp) == 0:
+                seq_ax = ("data", "model")   # long-context batch=1
+            elif s % tp == 0:
+                seq_ax = "model"             # context parallel
+            else:
+                seq_ax = None
+            return P(None, batch_ax, seq_ax, None, None)
+        # recurrent states (rwkv s/tm_prev/cm_prev, rglru h/conv): batch only
+        return P(None, batch_ax, *([None] * (rank - 2)))
+
+    flat, treedef = jax.tree.flatten_with_path(cache_shape)
+    return jax.tree.unflatten(treedef, [spec(p, l) for p, l in flat])
+
+
+def shard_leaf(mesh: Mesh, spec: P):
+    return NamedSharding(mesh, spec)

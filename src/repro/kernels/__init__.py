@@ -1,0 +1,3 @@
+"""Pallas TPU kernels: fused stencil pipeline, conv stencil, SWA decode."""
+from . import conv2d_stencil, ops, ref, stencil_pipeline, swa_decode
+from .ops import conv2d, fused_pipeline, swa_decode as swa_decode_op

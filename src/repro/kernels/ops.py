@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a
+real TPU pass interpret=False (the kernels are written against the TPU
+lowering: BlockSpec VMEM tiling, MXU-shaped contractions, (8,128) padding).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.codegen import PipelinePlan
+from repro.core.dag import PipelineDAG
+
+from .conv2d_stencil import conv2d
+from .stencil_pipeline import make_pipeline_kernel
+from .swa_decode import swa_decode
+
+__all__ = ["conv2d", "swa_decode", "fused_pipeline", "make_pipeline_kernel"]
+
+_PIPE_CACHE: dict = {}
+
+
+def fused_pipeline(dag: PipelineDAG, images: dict[str, jnp.ndarray],
+                   plan: PipelinePlan | None = None,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Run a whole pipeline DAG as one fused line-buffered kernel."""
+    h, w = next(iter(images.values())).shape
+    key = (dag.name, h, w, plan is not None, interpret)
+    if key not in _PIPE_CACHE:
+        _PIPE_CACHE[key] = make_pipeline_kernel(dag, h, w, plan=plan,
+                                                interpret=interpret)
+    fn, _ = _PIPE_CACHE[key]
+    return fn(images)
+
+
+def pipeline_vmem_bytes(dag: PipelineDAG, h: int, w: int,
+                        plan: PipelinePlan | None = None) -> int:
+    key = (dag.name, h, w, plan is not None, True)
+    if key not in _PIPE_CACHE:
+        _PIPE_CACHE[key] = make_pipeline_kernel(dag, h, w, plan=plan)
+    return _PIPE_CACHE[key][1]

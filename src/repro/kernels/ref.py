@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms import execute_reference
+from repro.core.dag import PipelineDAG
+
+
+def stencil_pipeline_ref(dag: PipelineDAG,
+                         images: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Whole-image reference for the fused stencil pipeline kernel."""
+    vals = execute_reference(dag, images)
+    return vals[dag.output_stages()[0]]
+
+
+def conv2d_ref(img: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Bottom-right-aligned (causal) 2D convolution with zero padding."""
+    kh, kw = weights.shape
+    h, w = img.shape
+    pad = jnp.pad(img, ((kh - 1, 0), (kw - 1, 0)))
+    out = jnp.zeros((h, w), img.dtype)
+    for dy in range(kh):
+        for dx in range(kw):
+            out = out + weights[dy, dx] * pad[dy:dy + h, dx:dx + w]
+    return out
+
+
+def swa_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   length: jnp.ndarray | int, ring_start: jnp.ndarray | int = 0
+                   ) -> jnp.ndarray:
+    """Sliding-window decode attention over a ring KV cache.
+
+    q: (B, Hq, D); k, v: (B, S, Hkv, D) ring buffers where only the
+    ``length`` most recent entries are valid; ``ring_start`` is the ring
+    offset of the oldest valid entry. Hq % Hkv == 0 (GQA).
+    Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k) / jnp.sqrt(float(d))
+    idx = jnp.arange(s)[None, :]                       # ring slot ids
+    length = jnp.asarray(length)
+    ring_start = jnp.asarray(ring_start)
+    # slot i is valid iff it is one of the `length` most recent writes
+    offset = jnp.remainder(idx - ring_start[..., None], s)
+    valid = offset < length[..., None]                 # (B, S)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return out.reshape(b, hq, d)

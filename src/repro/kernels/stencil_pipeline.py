@@ -1,0 +1,175 @@
+"""Fused line-buffered stencil pipeline — the paper's accelerator on TPU.
+
+One pl.pallas_call executes the *entire* pipeline DAG: the grid walks image
+rows; every stage computes its row of the frame each step, reading its
+producers' rows from VMEM ring buffers ("line buffers") and writing its own
+ring. Only the input row and the output row cross HBM per step — the HBM
+traffic of the whole pipeline is ~2 frames instead of ~2 frames *per stage*
+(what stage-by-stage XLA execution would do). This is the TPU-native
+embodiment of the paper's design:
+
+  * line buffer   -> VMEM scratch ring of shape (ring_rows, W_pad)
+  * ring sizing   -> from the ImaGen plan (ilp.py / linebuffer.py); at row
+    granularity with same-step topological execution every consumer can
+    read the producer's current row, so rings need >= max consumer SH rows
+    — exactly the plan's line counts
+  * line coalescing -> the (8,128) float32 VMEM tile: ring_rows are padded
+    to a multiple of 8 sublanes, so packing multiple logical lines per
+    tile (vs one line per scratch buffer) is the paper's Sec. 6 in TPU
+    layout terms. We allocate one (ring_rows_pad8, W_pad128) scratch per
+    stage and report the VMEM footprint.
+  * SRAM ports    -> no TPU analogue (VMEM is compiler-scheduled); the
+    port-contention machinery matters for the ASIC/FPGA backend only.
+    DESIGN.md Sec. 2 records this assumption change.
+
+The kernel body is generated from the DAG: stages execute in topological
+order inside the row loop, so the whole thing stays a single fused Pallas
+program. Stencil window math is plain VPU work (shift + multiply-add).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.codegen import PipelinePlan
+from repro.core.dag import PipelineDAG
+
+try:  # pltpu only resolves on TPU builds; interpret mode falls back to ANY
+    from jax.experimental.pallas import tpu as pltpu
+    _HAVE_PLTPU = True
+except Exception:  # pragma: no cover
+    _HAVE_PLTPU = False
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _plan_rings(dag: PipelineDAG, plan: PipelinePlan | None) -> dict[str, int]:
+    """Ring rows per buffer owner: the ImaGen plan's physical line counts
+    (>= max consumer SH), or the minimal SH-based sizing when no plan."""
+    rings: dict[str, int] = {}
+    for p in dag.topo_order:
+        shs = [e.sh for e in dag.out_edges(p)
+               if not dag.stages[e.consumer].is_output]
+        if not shs:
+            continue
+        min_rows = max(shs)
+        if plan is not None and p in plan.alloc.buffers:
+            rings[p] = max(plan.alloc.buffers[p].n_lines_phys, min_rows)
+        else:
+            rings[p] = min_rows
+    return rings
+
+
+def _row_window(rows: jnp.ndarray, sw: int) -> jnp.ndarray:
+    """(sh, W) producer rows -> (W, sh, sw) bottom-right-aligned windows."""
+    sh, w = rows.shape
+    padded = jnp.pad(rows, ((0, 0), (sw - 1, 0)))
+    cols = [padded[:, dx:dx + w] for dx in range(sw)]     # each (sh, W)
+    win = jnp.stack(cols, axis=-1)                        # (sh, W, sw)
+    return jnp.transpose(win, (1, 0, 2))                  # (W, sh, sw)
+
+
+def _stage_read(ring_ref, ring_rows: int, row: jnp.ndarray, sh: int, sw: int,
+                w: int) -> jnp.ndarray:
+    """Read the (sh, W) window rows [row-sh+1, row] from a ring buffer,
+    masking rows above the frame top to zero."""
+    rows = []
+    for k in range(sh - 1, -1, -1):
+        r = row - k
+        slot = jax.lax.rem(r + sh * ring_rows, ring_rows)  # positive mod
+        data = pl.load(ring_ref, (pl.dslice(slot, 1), pl.dslice(0, w)))
+        data = jnp.where(r >= 0, data, 0.0)
+        rows.append(data[0])
+    return jnp.stack(rows, axis=0)  # (sh, W) top..bottom
+
+
+def make_pipeline_kernel(dag: PipelineDAG, h: int, w: int,
+                         plan: PipelinePlan | None = None,
+                         interpret: bool = True):
+    """Build a jit-compiled fused executor for ``dag`` on (h, w) images.
+
+    Returns (fn, vmem_bytes): fn maps {input_name: (h, w) float32} to the
+    (h, w) float32 output of the pipeline's output stage.
+    """
+    rings = _plan_rings(dag, plan)
+    w_pad = _round_up(w, 128)
+    ring_shapes = {p: (_round_up(r, 8), w_pad) for p, r in rings.items()}
+    vmem_bytes = sum(r * c * 4 for (r, c) in ring_shapes.values())
+    ring_owners = list(ring_shapes)
+    inputs = dag.input_stages()
+    out_stage = dag.output_stages()[0]
+    # the stage the output stage reads (it streams 1x1 from it)
+    final = dag.in_edges(out_stage)[0].producer
+
+    def kernel(*refs):
+        in_refs = {name: refs[i] for i, name in enumerate(inputs)}
+        out_ref = refs[len(inputs)]
+        ring_refs = {p: refs[len(inputs) + 1 + i]
+                     for i, p in enumerate(ring_owners)}
+        row = pl.program_id(0)
+
+        produced: dict[str, jnp.ndarray] = {}
+        for name in dag.topo_order:
+            st = dag.stages[name]
+            if st.is_output:
+                continue
+            if st.is_input:
+                val = in_refs[name][0, :w]
+            elif st.fn is None:  # relay
+                e = dag.in_edges(name)[0]
+                rr = ring_shapes[e.producer][0]
+                val = _stage_read(ring_refs[e.producer], rr, row, 1, 1, w)[0]
+            else:
+                wins = {}
+                seen = set()
+                for e in dag.in_edges(name):
+                    rr = ring_shapes[e.producer][0]
+                    rows_ = _stage_read(ring_refs[e.producer], rr, row,
+                                        e.sh, e.sw, w)
+                    key = (e.producer if e.producer not in seen
+                           else f"{e.producer}#{e.sh}x{e.sw}")
+                    seen.add(e.producer)
+                    wins[key] = _row_window(rows_, e.sw)
+                val = st.fn(wins)  # (W,)
+            produced[name] = val
+            if name in ring_refs:
+                rr = ring_shapes[name][0]
+                slot = jax.lax.rem(row, rr)
+                pl.store(ring_refs[name], (pl.dslice(slot, 1), pl.dslice(0, w)),
+                         val[None, :])
+            if name == final:
+                out_ref[0, :w] = val
+
+    in_specs = [pl.BlockSpec((1, w_pad), lambda r: (r, 0)) for _ in inputs]
+    out_specs = pl.BlockSpec((1, w_pad), lambda r: (r, 0))
+    if _HAVE_PLTPU:
+        scratch = [pltpu.VMEM(ring_shapes[p], jnp.float32)
+                   for p in ring_owners]
+    else:  # pragma: no cover
+        scratch = [pl.MemorySpace.ANY(ring_shapes[p], jnp.float32)
+                   for p in ring_owners]
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=jax.ShapeDtypeStruct((h, w_pad), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )
+
+    @jax.jit
+    def fn(images: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        padded = [jnp.pad(jnp.asarray(images[n], jnp.float32),
+                          ((0, 0), (0, w_pad - w))) for n in inputs]
+        out = call(*padded)
+        return out[:, :w]
+
+    return fn, vmem_bytes

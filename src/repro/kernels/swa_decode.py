@@ -1,0 +1,80 @@
+"""Sliding-window decode attention over a ring KV cache (Pallas).
+
+The serving-side embodiment of the paper's line buffer (DESIGN.md Sec. 3):
+for local/sliding-window attention the decode KV cache holds only the last
+``window`` tokens in a ring — a line buffer with W = window, the decode
+step as producer and attention as consumer. The kv_planner sizes the ring;
+this kernel consumes it.
+
+Layout: one grid step per (batch, kv-head); the q block is that head's
+whole GQA group, so both contractions are MXU matmuls:
+
+    scores (G, S) = q (G, D) @ k^T (D, S)
+    out    (G, D) = p (G, S) @ v (S, D)
+
+Ring validity masking uses the (length, ring_start) scalars carried per
+batch; slots that have not been written yet (prefix warm-up) are masked.
+VMEM per step = S*(2D)*4B + O(G*D) — window 4096 x d128 fp32 = 4 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, start_ref, o_ref, *, scale: float):
+    q = q_ref[0, 0]              # (G, D)
+    k = k_ref[0, :, 0, :]        # (S, D)
+    v = v_ref[0, :, 0, :]        # (S, D)
+    length = len_ref[0, 0]
+    start = start_ref[0, 0]
+    s = k.shape[0]
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, s), 1)
+    offset = jax.lax.rem(idx - start + s, s)
+    valid = offset < length                       # (1, S)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)        # all-masked safety
+    e = jnp.where(valid, jnp.exp(scores - m), 0.0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(z, 1e-30)
+    o_ref[0, 0] = jnp.dot(p.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def swa_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               length: jnp.ndarray, ring_start: jnp.ndarray,
+               interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, D); k/v: (B, S, Hkv, D) rings; length/ring_start: (B,).
+
+    Returns (B, Hq, D) float32.
+    """
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    len2 = jnp.broadcast_to(length.astype(jnp.int32)[:, None], (b, 1))
+    st2 = jnp.broadcast_to(ring_start.astype(jnp.int32)[:, None], (b, 1))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / float(d) ** 0.5),
+        grid=(b, hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, s, 1, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, s, 1, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+        interpret=interpret,
+    )(qg, k.astype(jnp.float32), v.astype(jnp.float32), len2, st2)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,34 @@
+"""Production mesh builders (TPU v5e; 256 chips/pod).
+
+A FUNCTION, not a module-level constant — importing this module must not
+touch jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh for CPU-host tests (needs XLA host platform devices)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+# Hardware constants for the roofline analysis (assignment-provided).
+TPU_V5E = {
+    "peak_flops_bf16": 197e12,     # per chip
+    "hbm_bw": 819e9,               # bytes/s per chip
+    "ici_bw": 50e9,                # bytes/s per link
+    "hbm_bytes": 16 << 30,
+    "chips_per_pod": 256,
+}

@@ -1,0 +1,4 @@
+"""Architecture zoo: generic transformer + MoE + RWKV6 + RG-LRU hybrid."""
+from . import common, layers, moe, rglru, rwkv6, transformer
+from .common import ModelConfig, get_config, list_archs
+from .transformer import Model, build_model

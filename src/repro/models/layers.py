@@ -1,0 +1,422 @@
+"""Core neural layers in pure JAX: norms, RoPE/M-RoPE, GQA attention, MLPs.
+
+Parameters are plain dicts of jnp arrays; every init function returns
+(params, logical_axes) where logical_axes mirrors params with tuples of
+logical axis names consumed by distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _init(key, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+# --------------------------------------------------- activation sharding
+# MaxText-style explicit activation constraints: GSPMD's propagation alone
+# replicates large intermediates (especially around reshapes/scans), so the
+# launchers set this context and the layers pin the shardings they want.
+#   batch_axes: DP axes for activation dim 0
+#   seq_axis:   axis for sequence-parallel attention (set when the arch's
+#               head count cannot shard over 'model' — gemma3: 4 heads,
+#               phi4: 24, recurrentgemma: 10 on a 16-way axis); else None
+#   tp:         size of the 'model' axis (divisibility guard)
+# Requires an active jax.set_mesh(...) scope (dryrun/train set one).
+_ACT_SHARD: contextvars.ContextVar = contextvars.ContextVar(
+    "act_shard", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes, seq_axis=None, tp: int = 1,
+                        model_axis: str = "model"):
+    tok = _ACT_SHARD.set((tuple(batch_axes), seq_axis, tp, model_axis))
+    try:
+        yield
+    finally:
+        _ACT_SHARD.reset(tok)
+
+
+def _seq_constraint(x, seq_dim: int):
+    ctx = _ACT_SHARD.get()
+    if ctx is None or ctx[1] is None:
+        return x
+    batch_axes, seq_ax, _, _ = ctx
+    spec = [None] * x.ndim
+    spec[0] = batch_axes
+    spec[seq_dim] = seq_ax
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_dim(x, dim: int, batch_dim: int | None = 0):
+    """Pin dim onto the model axis (if divisible) + dim0 onto DP axes."""
+    ctx = _ACT_SHARD.get()
+    if ctx is None:
+        return x
+    batch_axes, _, tp, model_axis = ctx
+    spec = [None] * x.ndim
+    if batch_dim is not None:
+        spec[batch_dim] = batch_axes
+    if x.shape[dim] % max(tp, 1) == 0 and tp > 1:
+        spec[dim] = model_axis
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def pin_batch(x, batch_dim: int = 0):
+    """Pin only the batch dim onto the DP axes (GSPMD loses batch
+    sharding inside scans/scatters surprisingly often)."""
+    ctx = _ACT_SHARD.get()
+    if ctx is None:
+        return x
+    batch_axes = ctx[0]
+    spec = [None] * x.ndim
+    spec[batch_dim] = batch_axes
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": ("embed",)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (B, S, N, hd); positions: (B, S) -> rotated x."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))          # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections=(2, 3, 3)) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: positions (3, B, S) = (temporal, h, w); the head-dim
+    frequency bands are split across the three components in proportion
+    ``sections`` (arXiv:2409.12191)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.asarray(rope_freqs(hd, theta))          # (half,)
+    total = sum(sections)
+    bounds = np.cumsum([int(half * s / total) for s in sections])
+    comp = np.zeros((half,), np.int32)
+    comp[bounds[0]:bounds[1]] = 1
+    comp[bounds[1]:] = 2
+    pos = positions.astype(jnp.float32)                 # (3, B, S)
+    ang = pos[jnp.asarray(comp), :, :].transpose(1, 2, 0) * freqs  # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+_QUERY_BLOCK = 1024  # query-chunk size for long-sequence full attention
+
+
+def attention_init(key, d, n_heads, n_kv, hd, qkv_bias=False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, n_heads, hd)),
+        "wk": _init(ks[1], (d, n_kv, hd)),
+        "wv": _init(ks[2], (d, n_kv, hd)),
+        "wo": _init(ks[3], (n_heads, hd, d), scale=1.0 / math.sqrt(n_heads * hd)),
+    }
+    ax = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, hd), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv, hd), jnp.float32)
+        ax["bq"] = ("heads", "head_dim")
+        ax["bk"] = ("kv_heads", "head_dim")
+        ax["bv"] = ("kv_heads", "head_dim")
+    return p, ax
+
+
+def _qkv(params, x, positions, theta, mrope_positions=None):
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, theta)
+        k = apply_mrope(k, mrope_positions, theta)
+    elif positions is not None:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def gqa_attention(params, x, positions, *, causal=True, window=0,
+                  theta=1e4, mrope_positions=None):
+    """Full-sequence GQA attention. window>0 masks i-j < window (causal
+    sliding window); causal=False gives a bidirectional encoder.
+
+    Sliding windows with s > 2*window take the banded path — O(S*2w)
+    compute/memory instead of a masked O(S^2), preserving the
+    sub-quadratic structure of local-attention archs."""
+    b, s, d = x.shape
+    if window and causal and s > 2 * window:
+        return banded_attention(params, x, positions, window=window,
+                                theta=theta)
+    n_heads = params["wq"].shape[1]
+    n_kv = params["wk"].shape[1]
+    hd = params["wq"].shape[2]
+    g = n_heads // n_kv
+    q, k, v = _qkv(params, x, positions, theta, mrope_positions)
+    q = _seq_constraint(q, 1)
+    # GQA via a static head gather: keeps the *flat* head dim (which the
+    # sharding rules put on 'model') intact — reshaping 48 sharded heads
+    # into (n_kv=8, g=6) would force GSPMD to replicate (n_kv < tp).
+    kv_map = np.repeat(np.arange(n_kv), g)
+    kf = k[:, :, kv_map]                               # (B, S, N, hd)
+    vf = v[:, :, kv_map]
+
+    qblk = _QUERY_BLOCK
+    if s > 2 * qblk and s % qblk == 0:
+        out = _flash_attention(q, kf, vf, causal=causal, window=window)
+    else:
+        scores = jnp.einsum("bsnh,btnh->bnst", q, kf).astype(jnp.float32)
+        scores = scores / math.sqrt(hd)                 # (B,N,S,T)
+        scores = _seq_constraint(scores, 2)
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        mask = jnp.ones((s, s), bool)
+        if causal:
+            mask = mask & (j <= i)
+        if window:
+            mask = mask & (i - j < window)
+        scores = jnp.where(mask, scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bnst,btnh->bsnh", p, vf)
+    out = _seq_constraint(out, 1)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def _flash_attention(q, kf, vf, *, causal=True, window=0):
+    """Online-softmax attention: lax.scan over key blocks, query blocks
+    tensorized (dim 1) so GSPMD can shard them — low-head archs get
+    sequence-parallel attention, head-rich archs shard the flat head dim.
+    Score memory per step: (B, nb, N, qblk, kblk) / shards.
+
+    q/kf/vf: (B, S, N, hd) with KV heads pre-gathered to flat N.
+    """
+    b, s, n, hd = q.shape
+    qblk = kblk = _QUERY_BLOCK
+    ctx = _ACT_SHARD.get()
+    if ctx is not None and ctx[1] is not None:
+        # sequence-parallel attention: size query blocks so the block dim
+        # covers the whole model axis (nb == tp) — with the default 1024
+        # blocks a 4k sequence yields nb=4 on a 16-way axis, wasting 4x
+        # memory and compute (EXPERIMENTS.md §Perf iteration 2)
+        tp = max(ctx[2], 1)
+        if s % tp == 0 and (s // tp) % 128 == 0:
+            qblk = kblk = max(s // tp, 128)
+    nb, nk = s // qblk, s // kblk
+    qb = q.reshape(b, nb, qblk, n, hd)
+    qb = _seq_constraint(qb, 1)
+    kb = kf.reshape(b, nk, kblk, n, hd).transpose(1, 0, 2, 3, 4)
+    vb = vf.reshape(b, nk, kblk, n, hd).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / math.sqrt(hd)
+    i_glob = (jnp.arange(nb)[:, None] * qblk
+              + jnp.arange(qblk)[None, :])          # (nb, qblk)
+
+    def kv_step(carry, inp):
+        m_run, l_run, acc = carry                    # (B,nb,N,qblk), acc+hd
+        kv_t, vv_t, t = inp                          # (B,kblk,N,hd), t
+        sc = jnp.einsum("bnqah,btah->bnaqt", qb, kv_t)
+        sc = sc.astype(jnp.float32) * scale          # (B,nb,N,qblk,kblk)
+        sc = _seq_constraint(sc, 1)
+        sc = shard_dim(sc, 2)                        # batch on dp, N on tp
+        j = t * kblk + jnp.arange(kblk)              # (kblk,)
+        ii = i_glob[None, :, None, :, None]
+        jj = j[None, None, None, None, :]
+        mask = jnp.ones(sc.shape[-2:], bool)
+        if causal:
+            mask = mask & (jj <= ii)
+        if window:
+            mask = mask & (ii - jj < window)
+        sc = jnp.where(mask, sc, -jnp.inf)
+        m_new = jnp.maximum(m_run, sc.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(sc - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(sc), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_run),
+                         jnp.exp(m_run - m_safe), 0.0)
+        l_run = l_run * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bnaqt,btah->bnqah", p.astype(vv_t.dtype), vv_t)
+        acc = acc * corr.transpose(0, 1, 3, 2)[..., None] \
+            + pv.astype(jnp.float32)
+        return (m_new, l_run, acc), None
+
+    m0 = shard_dim(jnp.full((b, nb, n, qblk), -jnp.inf, jnp.float32), 2)
+    l0 = shard_dim(jnp.zeros((b, nb, n, qblk), jnp.float32), 2)
+    a0 = shard_dim(jnp.zeros((b, nb, qblk, n, hd), jnp.float32), 3)
+    kb = pin_batch(kb, 1)
+    vb = pin_batch(vb, 1)
+    (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (kb, vb, jnp.arange(nk)))
+    out = acc / jnp.maximum(l_f, 1e-30).transpose(0, 1, 3, 2)[..., None]
+    return out.reshape(b, s, n, hd).astype(q.dtype)
+
+
+def banded_attention(params, x, positions, *, window, theta=1e4):
+    """Causal sliding-window attention computed on w-sized blocks: each
+    query block attends its own + the previous key block (covers all
+    j in (i-w, i]). Exact same output as the masked full attention.
+    Flat head dim (KV pre-gathered) so 'model' sharding survives."""
+    b, s, d = x.shape
+    w = window
+    n_heads = params["wq"].shape[1]
+    n_kv = params["wk"].shape[1]
+    hd = params["wq"].shape[2]
+    g = n_heads // n_kv
+    q, k, v = _qkv(params, x, positions, theta)
+    kv_map = np.repeat(np.arange(n_kv), g)
+    k, v = k[:, :, kv_map], v[:, :, kv_map]            # (B, S, N, hd)
+    pad = (-s) % w
+    if pad:
+        zq = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zq(q), zq(k), zq(v)
+    sp = s + pad
+    nb = sp // w
+    qb = q.reshape(b, nb, w, n_heads, hd)
+    qb = _seq_constraint(qb, 1)
+    kb = k.reshape(b, nb, w, n_heads, hd)
+    vb = v.reshape(b, nb, w, n_heads, hd)
+    shift = lambda a: jnp.concatenate(
+        [jnp.zeros_like(a[:, :1]), a[:, :-1]], axis=1)
+    kcat = jnp.concatenate([shift(kb), kb], axis=2)    # (B, nb, 2w, N, hd)
+    vcat = jnp.concatenate([shift(vb), vb], axis=2)
+    scores = jnp.einsum("bcqnh,bcknh->bcnqk", qb, kcat)
+    scores = scores.astype(jnp.float32) / math.sqrt(hd)
+    scores = _seq_constraint(scores, 1)                # (B,nb,N,w,2w)
+    qi = jnp.arange(w)[:, None]                        # local query idx
+    kj = jnp.arange(2 * w)[None, :]                    # local key idx
+    blk = jnp.arange(nb)[:, None, None]
+    rel = qi + w - kj                                   # i - j
+    jglob = (blk - 1) * w + kj                          # >= 0 validity
+    mask = (rel >= 0) & (rel < w) & (jglob >= 0)        # (nb, w, 2w)
+    scores = jnp.where(mask[None, :, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bcnqk,bcknh->bcqnh", p, vcat)
+    out = out.reshape(b, sp, n_heads, hd)[:, :s]
+    out = _seq_constraint(out, 1)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def gqa_decode_step(params, x, cache_k, cache_v, pos, *, window=0, theta=1e4):
+    """One-token decode. x: (B, 1, D); cache: (B, S_cache, Nkv, hd) — a full
+    causal cache (S_cache = max_seq) or a ring (S_cache = ring size) when
+    window > 0 (the line-buffer analogue, DESIGN.md Sec. 3).
+
+    pos: (B,) current absolute position. Returns (out, new_k, new_v)."""
+    b, _, d = x.shape
+    s_cache = cache_k.shape[1]
+    n_heads = params["wq"].shape[1]
+    n_kv = params["wk"].shape[1]
+    hd = params["wq"].shape[2]
+    g = n_heads // n_kv
+    q, k, v = _qkv(params, x, pos[:, None], theta)
+    slot = jnp.remainder(pos, s_cache) if window else pos   # ring vs linear
+    cache_k = _scatter_rows(cache_k, k, slot)
+    cache_v = _scatter_rows(cache_v, v, slot)
+    qg = q.reshape(b, n_kv, g, hd)                          # squeeze S=1
+    scores = jnp.einsum("bngh,btnh->bngt", qg, cache_k)
+    scores = scores.astype(jnp.float32) / math.sqrt(hd)     # (B,Nkv,G,T)
+    t = jnp.arange(s_cache)[None, :]
+    if window:
+        # ring slot t holds absolute position p_t with (slot - t) mod S =
+        # age; valid if age < min(pos+1, window)
+        age = jnp.remainder(slot[:, None] - t, s_cache)
+        valid = age < jnp.minimum(pos[:, None] + 1, window)
+    else:
+        valid = t <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bngt,btnh->bngh", p, cache_v).reshape(b, 1, n_heads, hd)
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+def _scatter_rows(cache, kv, slot):
+    """cache (B,S,N,h) <- kv (B,1,N,h) at per-batch row ``slot``."""
+    b, s, n, h = cache.shape
+    onehot = jax.nn.one_hot(slot, s, dtype=cache.dtype)  # (B, S)
+    return cache * (1 - onehot)[:, :, None, None] + \
+        onehot[:, :, None, None] * kv
+
+
+# -------------------------------------------------------------------- MLP
+def mlp_init(key, d, d_ff, kind="swiglu"):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        p = {"w_gate": _init(ks[0], (d, d_ff)), "w_up": _init(ks[1], (d, d_ff)),
+             "w_down": _init(ks[2], (d_ff, d), scale=1.0 / math.sqrt(d_ff))}
+        ax = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+              "w_down": ("mlp", "embed")}
+    else:  # plain gelu
+        p = {"w_up": _init(ks[0], (d, d_ff)),
+             "w_down": _init(ks[1], (d_ff, d), scale=1.0 / math.sqrt(d_ff))}
+        ax = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    return p, ax
+
+
+def mlp(params, x, kind="swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype)) * (
+            x @ params["w_up"].astype(x.dtype))
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype)) * (
+            x @ params["w_up"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ params["w_up"].astype(x.dtype))
+    h = shard_dim(h, -1)   # hidden stays column-parallel on 'model'
+    return h @ params["w_down"].astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding
+def embed_init(key, vocab, d):
+    # scale 1/sqrt(d): with the sqrt(d) embedding multiplier activations
+    # enter the stack ~N(0,1) and tied-unembed logits stay O(1)
+    p = {"table": _init(key, (vocab, d), scale=1.0 / math.sqrt(d))}
+    return p, {"table": ("vocab", "embed")}
+
+
+def embed(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params_embed, x, lm_head=None):
+    if lm_head is not None:
+        return x @ lm_head.astype(x.dtype)
+    return x @ params_embed["table"].astype(x.dtype).T

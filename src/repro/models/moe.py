@@ -1,0 +1,149 @@
+"""Token-choice top-k MoE with per-row sorted capacity dispatch.
+
+Routing, sorting and the capacity buffers all carry the batch dimension:
+each batch row dispatches its own seq*top_k assignments into (E, C)
+buffers with C = ceil(seq * k / E * capacity_factor). Under pjit the
+buffers therefore shard over the DP axes exactly like activations — no
+global token sort, no replicated (E, C_global, D) intermediates (which is
+what blew 300 GiB/device in the first dry-run of mixtral).
+
+Sharding constraints (active when distributed/sharding.py sets the
+context): expert dim -> 'model' for EP archs (granite-moe, 32 experts /
+16-way axis), expert-FFN dim -> 'model' for TP-inside-expert archs
+(mixtral, 8 experts). Overflow tokens drop (capacity semantics); the
+residual path keeps them alive.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import _init
+
+# (batch_axes, expert_axis, ff_axis) — set by launch/dryrun/train
+_MOE_SHARD: contextvars.ContextVar = contextvars.ContextVar(
+    "moe_shard", default=None)
+
+
+@contextlib.contextmanager
+def moe_sharding(batch_axes, expert_axis=None, ff_axis=None):
+    tok = _MOE_SHARD.set((tuple(batch_axes), expert_axis, ff_axis))
+    try:
+        yield
+    finally:
+        _MOE_SHARD.reset(tok)
+
+
+def _constrain(x, *axes):
+    ctx = _MOE_SHARD.get()
+    if ctx is None:
+        return x
+    batch_axes, ep, ff = ctx
+    names = {"batch": batch_axes, "expert": ep, "ff": ff, None: None}
+    return jax.lax.with_sharding_constraint(
+        x, P(*[names[a] for a in axes]))
+
+
+def moe_init(key, d, d_ff, n_experts, kind="swiglu"):
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _init(ks[0], (d, n_experts), scale=0.02),
+        "w_gate": _init(ks[1], (n_experts, d, d_ff)),
+        "w_up": _init(ks[2], (n_experts, d, d_ff)),
+        "w_down": _init(ks[3], (n_experts, d_ff, d),
+                        scale=1.0 / math.sqrt(d_ff)),
+    }
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("expert", "embed", "mlp"),
+        "w_up": ("expert", "embed", "mlp"),
+        "w_down": ("expert", "mlp", "embed"),
+    }
+    return p, ax
+
+
+def moe_apply(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              kind: str = "swiglu"):
+    """x: (B, S, D) -> (B, S, D), aux losses dict. Per-row dispatch."""
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    nk = s * top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)               # (B, S, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(s * top_k / e * capacity_factor))
+    flat_e = top_i.reshape(b, nk)                            # (B, S*K)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s), top_k)[None], (b, nk))
+    flat_w = top_p.reshape(b, nk)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    sorted_t = jnp.take_along_axis(flat_t, order, axis=1)
+    sorted_w = jnp.take_along_axis(flat_w, order, axis=1)
+    # rank within expert = position - first position of that expert
+    pos = jnp.arange(nk)[None]
+    first = jax.vmap(jnp.searchsorted)(sorted_e,
+                                       jnp.broadcast_to(jnp.arange(e),
+                                                        (b, e)))
+    rank = pos - jnp.take_along_axis(first, sorted_e, axis=1)
+    keep = rank < cap
+    dest = jnp.where(keep, sorted_e * cap + rank, e * cap)   # overflow bin
+
+    rows = jnp.arange(b)[:, None]
+    # gather-only dispatch: scatter just an int32 inverse map (slot ->
+    # sorted position), then gather token vectors. Scattering the (D,)
+    # rows directly trips XLA scatter AD into materializing buffer-shaped
+    # index tensors (40 GiB of u32 in the first mixtral dry-run).
+    inv = jnp.full((b, e * cap + 1), nk, jnp.int32)
+    inv = inv.at[rows, dest].set(
+        jnp.broadcast_to(jnp.arange(nk, dtype=jnp.int32)[None], (b, nk)),
+        mode="drop")
+    gathered = jnp.take_along_axis(
+        x, sorted_t[..., None], axis=1)                      # (B, S*K, D)
+    gathered = _constrain(gathered, "batch", None, None)
+    xpad = jnp.concatenate(
+        [gathered, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    buf = jnp.take_along_axis(xpad, inv[:, :-1, None], axis=1)
+    hidden = _constrain(buf.reshape(b, e, cap, d),
+                        "batch", "expert", None, None)
+
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    if kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", hidden, wg)) * \
+            jnp.einsum("becd,edf->becf", hidden, wu)
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", hidden, wu))
+    h = _constrain(h, "batch", "expert", None, "ff")
+    out_buf = jnp.einsum("becf,efd->becd", h, wd)
+    out_buf = _constrain(out_buf, "batch", "expert", None, None)
+    out_buf = out_buf.reshape(b, e * cap, d)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+
+    weighted = jnp.take_along_axis(out_buf, dest[..., None], axis=1) \
+        * sorted_w[..., None].astype(x.dtype)
+    weighted = _constrain(weighted, "batch", None, None)
+    # gather-only combine: unsort the (token, k) entries back to their
+    # original layout (token-major), then sum each token's k slots
+    inv_order = jnp.argsort(order, axis=1)
+    unsorted = jnp.take_along_axis(weighted, inv_order[..., None], axis=1)
+    out = unsorted.reshape(b, s, top_k, d).sum(axis=2)
+    out = _constrain(out, "batch", None, None)
+
+    # load-balancing aux loss (Switch-style), fp32
+    me = probs.mean((0, 1))                                  # (E,)
+    ce = jnp.zeros((e,)).at[flat_e.reshape(-1)].add(1.0) / (b * nk)
+    aux = {"load_balance": e * jnp.sum(me * ce),
+           "router_z": jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)}
+    return out, aux

@@ -1,0 +1,122 @@
+"""RG-LRU recurrent blocks (Griffin/RecurrentGemma, arXiv:2402.19427).
+
+The recurrence is diagonal-linear with input-dependent gates,
+
+    a_t = a^(c * r_t),  a = sigmoid(lambda_p)   (per channel)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+so training uses jax.lax.associative_scan (O(log T) depth — the
+long-context path that makes long_500k viable), and decode carries the
+O(1) diagonal state. The block is linear -> temporal conv1d (width 4)
+-> RG-LRU -> gated linear out, mixed 2:1 with local-attention blocks by
+the config's block_pattern.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init
+
+_C = 8.0  # gate temperature from the Griffin paper
+
+
+def rglru_block_init(key, d, lru_width, conv_width=4):
+    ks = jax.random.split(key, 7)
+    w = lru_width
+    p = {
+        "w_x": _init(ks[0], (d, w)), "w_y": _init(ks[1], (d, w)),
+        "conv_w": _init(ks[2], (conv_width, w), scale=0.1),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "lambda_p": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+        "w_rgate": _init(ks[3], (w, w), scale=0.02),
+        "w_igate": _init(ks[4], (w, w), scale=0.02),
+        "w_out": _init(ks[5], (w, d), scale=1.0 / math.sqrt(w)),
+    }
+    ax = {"w_x": ("embed", "mlp"), "w_y": ("embed", "mlp"),
+          "conv_w": (None, "mlp"), "conv_b": ("mlp",),
+          "lambda_p": ("mlp",),
+          "w_rgate": ("mlp", None), "w_igate": ("mlp", None),
+          "w_out": ("mlp", "embed")}
+    return p, ax
+
+
+def _conv1d(x, w, b):
+    """Causal depthwise temporal conv. x: (B,S,W); w: (K,W)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(k))
+    return out + b.astype(x.dtype)
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u @ p["w_rgate"].astype(u.dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ p["w_igate"].astype(u.dtype)).astype(jnp.float32)
+    log_a0 = -jax.nn.softplus(-p["lambda_p"]).astype(jnp.float32)  # log sigmoid
+    log_a = _C * r * log_a0[None, None, :]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * u.astype(jnp.float32)
+    return a, gated
+
+
+_CHUNK = 512  # time-chunk: assoc-scan inside, sequential across
+
+
+def rglru_block(p, x, state=None):
+    """x: (B,S,D) -> (out, final_state (B,W)).
+
+    Chunked associative scan: O(log chunk) depth inside rematerialized
+    chunks, sequential carry across — bounds backward memory at
+    O(S/chunk + chunk * log chunk) instead of O(S log S) saved levels.
+    """
+    from .layers import shard_dim
+    b, s, d = x.shape
+    u = shard_dim(x @ p["w_x"].astype(x.dtype), -1)
+    y_branch = jax.nn.gelu(shard_dim(x @ p["w_y"].astype(x.dtype), -1))
+    u = shard_dim(_conv1d(u, p["conv_w"], p["conv_b"]), -1)
+    a, gated = _gates(p, u)
+    a, gated = shard_dim(a, -1), shard_dim(gated, -1)
+    w = u.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, w), jnp.float32)
+
+    def comb(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+
+    chunk = min(_CHUNK, s)
+    pad = (-s) % chunk
+    nc = (s + pad) // chunk
+    ap = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    gp = jnp.pad(gated, ((0, 0), (0, pad), (0, 0)))
+    ac = ap.transpose(1, 0, 2).reshape(nc, chunk, b, w)
+    gc = gp.transpose(1, 0, 2).reshape(nc, chunk, b, w)
+
+    @jax.checkpoint
+    def one_chunk(carry, inp):
+        a_i, g_i = inp                            # (chunk, B, W)
+        g_i = g_i.at[0].add(a_i[0] * carry)
+        aa, hh = jax.lax.associative_scan(comb, (a_i, g_i), axis=0)
+        return hh[-1], hh
+
+    state, hh = jax.lax.scan(one_chunk, state, (ac, gc))
+    hh = hh.reshape(nc * chunk, b, w)[:s].transpose(1, 0, 2)
+    out = (hh.astype(x.dtype) * y_branch) @ p["w_out"].astype(x.dtype)
+    return out, state
+
+
+def rglru_decode(p, x, state, conv_state):
+    """x: (B,1,D); state: (B,W); conv_state: (B,K-1,W) past conv inputs."""
+    b, _, d = x.shape
+    u_new = (x @ p["w_x"].astype(x.dtype))[:, 0]          # (B, W)
+    y_branch = jax.nn.gelu(x @ p["w_y"].astype(x.dtype))[:, 0]
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, u_new[:, None]], axis=1)  # (B,K,W)
+    u = sum(window[:, i] * p["conv_w"][i].astype(x.dtype)
+            for i in range(k)) + p["conv_b"].astype(x.dtype)
+    a, gated = _gates(p, u[:, None])
+    h = a[:, 0] * state + gated[:, 0]
+    out = (h.astype(x.dtype) * y_branch) @ p["w_out"].astype(x.dtype)
+    return out[:, None], h, window[:, 1:]

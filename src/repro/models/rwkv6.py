@@ -1,0 +1,171 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892): data-dependent decay linear
+attention (time-mix) + channel-mix, attention-free.
+
+State per head is the (hd, hd) outer-product accumulator
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t produced from the token-shifted input (the "data-dependent decay"
+that distinguishes Finch from RWKV-5). Training uses lax.scan over time;
+decode carries S as the O(1) recurrent state — the degenerate one-line
+line buffer of DESIGN.md Sec. 5.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init
+
+
+def rwkv6_block_init(key, d, n_heads, d_ff):
+    hd = d // n_heads
+    ks = jax.random.split(key, 10)
+    p = {
+        # time-mix
+        "mu": jnp.full((5, d), 0.5, jnp.float32),     # token-shift mixes
+        "w_r": _init(ks[0], (d, d)), "w_k": _init(ks[1], (d, d)),
+        "w_v": _init(ks[2], (d, d)), "w_o": _init(ks[3], (d, d)),
+        "w_decay": _init(ks[4], (d, d), scale=0.01),
+        "decay_base": jnp.full((n_heads, hd), -6.0, jnp.float32),
+        "bonus_u": jnp.zeros((n_heads, hd), jnp.float32),
+        "w_gate": _init(ks[5], (d, d)),
+        # channel-mix
+        "cm_mu": jnp.full((2, d), 0.5, jnp.float32),
+        "cm_k": _init(ks[6], (d, d_ff)),
+        "cm_v": _init(ks[7], (d_ff, d), scale=1.0 / math.sqrt(d_ff)),
+        "cm_r": _init(ks[8], (d, d)),
+    }
+    ax = {
+        "mu": (None, "embed"),
+        "w_r": ("embed", "heads_flat"), "w_k": ("embed", "heads_flat"),
+        "w_v": ("embed", "heads_flat"), "w_o": ("heads_flat", "embed"),
+        "w_decay": ("embed", "heads_flat"),
+        "decay_base": ("kv_heads", None), "bonus_u": ("kv_heads", None),
+        "w_gate": ("embed", "heads_flat"),
+        "cm_mu": (None, "embed"),
+        "cm_k": ("embed", "mlp"), "cm_v": ("mlp", "embed"),
+        "cm_r": ("embed", "heads_flat"),
+    }
+    return p, ax
+
+
+def _shift(x):
+    """Token shift: x_{t-1} (zeros at t=0). x: (B, S, D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _time_mix_inputs(p, x, n_heads):
+    from .layers import shard_dim
+    b, s, d = x.shape
+    hd = d // n_heads
+    xs = _shift(x)
+    mu = p["mu"].astype(x.dtype)
+    xr = x * mu[0] + xs * (1 - mu[0])
+    xk = x * mu[1] + xs * (1 - mu[1])
+    xv = x * mu[2] + xs * (1 - mu[2])
+    xw = x * mu[3] + xs * (1 - mu[3])
+    xg = x * mu[4] + xs * (1 - mu[4])
+    proj = lambda u, w_: shard_dim(
+        (u @ p[w_].astype(x.dtype)), -1).reshape(b, s, n_heads, hd)
+    r, k, v = proj(xr, "w_r"), proj(xk, "w_k"), proj(xv, "w_v")
+    # data-dependent decay in (0, 1): w = exp(-exp(base + dx))
+    dx = proj(xw, "w_decay")
+    w = jnp.exp(-jnp.exp(p["decay_base"].astype(jnp.float32)
+                         + dx.astype(jnp.float32)))
+    w = shard_dim(w, 2)
+    g = shard_dim(jax.nn.silu(xg @ p["w_gate"].astype(x.dtype)), -1)
+    return r, k, v, w, g
+
+
+_CHUNK = 64  # time-chunk for the two-level WKV scan
+
+
+def time_mix(p, x, n_heads, state=None):
+    """x: (B,S,D) -> (out, final_state). state: (B,H,hd,hd) fp32.
+
+    Two-level scan: an outer scan over T/_CHUNK rematerialized chunks and
+    an inner scan over _CHUNK steps. Backward memory is then
+    O(T/chunk + chunk) states instead of O(T) — a 4096-step fp32
+    (B,H,hd,hd) carry per step is ~0.5 TB of saved residuals otherwise
+    (the first dry-run's 129 GiB/device).
+    """
+    b, s, d = x.shape
+    hd = d // n_heads
+    r, k, v, w, g = _time_mix_inputs(p, x, n_heads)
+    u = p["bonus_u"].astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp       # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        o = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                       S + u[None, :, :, None] * kv)
+        S = w_t.astype(jnp.float32)[..., None] * S + kv
+        return S, o
+
+    chunk = min(_CHUNK, s)
+    pad = (-s) % chunk
+
+    from .layers import shard_dim
+
+    def prep(a, pad_value=0.0):  # (B,S,H,hd) -> (nc, chunk, B, H, hd)
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=pad_value)
+        a = a.transpose(1, 0, 2, 3)
+        a = a.reshape((s + pad) // chunk, chunk, b, n_heads, hd)
+        return shard_dim(a, 3, batch_dim=2)
+    # padded steps must be state-identities: decay w=1, k=0 (=> kv=0)
+    xs = (prep(r), prep(k), prep(v), prep(w, pad_value=1.0))
+
+    @jax.checkpoint
+    def chunk_scan(S, inp):
+        S, outs = jax.lax.scan(step, S, inp)
+        return S, outs
+
+    state, outs = jax.lax.scan(chunk_scan, state, xs)
+    outs = outs.reshape((s + pad), b, n_heads, hd)[:s]
+    out = outs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = (out * g) @ p["w_o"].astype(x.dtype)
+    return out, state
+
+
+def channel_mix(p, x):
+    from .layers import shard_dim
+    xs = _shift(x)
+    mu = p["cm_mu"].astype(x.dtype)
+    xk = x * mu[0] + xs * (1 - mu[0])
+    xr = x * mu[1] + xs * (1 - mu[1])
+    k = jnp.square(jax.nn.relu(shard_dim(xk @ p["cm_k"].astype(x.dtype), -1)))
+    return jax.nn.sigmoid(xr @ p["cm_r"].astype(x.dtype)) * (
+        k @ p["cm_v"].astype(x.dtype))
+
+
+def time_mix_decode(p, x, n_heads, state, x_prev):
+    """Single-token decode. x: (B,1,D); state: (B,H,hd,hd); x_prev: (B,1,D)
+    (the previous token's activations for the token-shift)."""
+    b, _, d = x.shape
+    hd = d // n_heads
+    mu = p["mu"].astype(x.dtype)
+    mix = lambda i: x * mu[i] + x_prev * (1 - mu[i])
+    r = (mix(0) @ p["w_r"].astype(x.dtype)).reshape(b, n_heads, hd)
+    k = (mix(1) @ p["w_k"].astype(x.dtype)).reshape(b, n_heads, hd)
+    v = (mix(2) @ p["w_v"].astype(x.dtype)).reshape(b, n_heads, hd)
+    dx = (mix(3) @ p["w_decay"].astype(x.dtype)).reshape(b, n_heads, hd)
+    w = jnp.exp(-jnp.exp(p["decay_base"].astype(jnp.float32)
+                         + dx.astype(jnp.float32)))
+    g = jax.nn.silu(mix(4) @ p["w_gate"].astype(x.dtype))
+    u = p["bonus_u"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                    v.astype(jnp.float32))
+    o = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32),
+                   state + u[None, :, :, None] * kv)
+    state = w[..., None] * state + kv
+    out = o.reshape(b, 1, d).astype(x.dtype)
+    out = (out * g) @ p["w_o"].astype(x.dtype)
+    return out, state

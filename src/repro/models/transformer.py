@@ -1,0 +1,421 @@
+"""Generic LM assembler covering the full architecture zoo.
+
+A model is a sequence of *segments*; each segment is a stack of identical
+super-blocks executed with one jax.lax.scan (O(1) HLO size in depth — this
+is what keeps 56-layer mixtral dry-run compiles tractable on one host).
+Interleaved patterns (gemma3's 5 local : 1 global, recurrentgemma's
+rec,rec,attn) become super-blocks so every sub-layer keeps a *static*
+attention kind — no lax.cond, so cost_analysis FLOPs stay exact for the
+roofline.
+
+Families:
+  dense / moe / encoder / vlm -> attention super-blocks (+ MoE FFN)
+  ssm (rwkv6)                 -> time-mix/channel-mix blocks
+  hybrid (recurrentgemma)     -> RG-LRU blocks + local-attention blocks
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as M
+from . import rglru as R
+from . import rwkv6 as W
+from .common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    n: int                      # number of super-blocks (scan length)
+    kinds: tuple[str, ...]      # sub-layer kinds within one super-block:
+                                # 'G' global attn, 'L' local attn, 'R' rglru,
+                                # 'W' rwkv
+    def __post_init__(self):
+        assert self.n >= 1 and len(self.kinds) >= 1
+
+
+def plan_segments(cfg: ModelConfig) -> list[Segment]:
+    """Factor the per-layer kind sequence into scan-able segments."""
+    if cfg.family == "ssm":
+        kinds = ["W"] * cfg.n_layers
+    elif cfg.family == "hybrid":
+        kinds = ["R" if k == "rec" else "L" for k in cfg.block_kinds()]
+    else:
+        kinds = cfg.layer_kinds()
+    # greedy: find smallest repeating unit, scan over repeats, unroll rest
+    segs: list[Segment] = []
+    i = 0
+    n = len(kinds)
+    while i < n:
+        best = (1, 1)  # (unit_len, repeats)
+        for unit in range(1, min(8, n - i) + 1):
+            reps = 1
+            while i + unit * (reps + 1) <= n and \
+                    kinds[i + unit * reps: i + unit * (reps + 1)] == \
+                    kinds[i:i + unit]:
+                reps += 1
+            if unit * reps > best[0] * best[1] or \
+                    (unit * reps == best[0] * best[1] and unit < best[0]):
+                best = (unit, reps)
+        unit, reps = best
+        segs.append(Segment(n=reps, kinds=tuple(kinds[i:i + unit])))
+        i += unit * reps
+    return segs
+
+
+# ------------------------------------------------------------- sub-layers
+def _subblock_init(key, cfg: ModelConfig, kind: str):
+    p: dict[str, Any] = {}
+    ax: dict[str, Any] = {}
+    if kind in ("G", "L"):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p["ln1"], ax["ln1"] = L.rmsnorm_init(cfg.d_model)
+        p["attn"], ax["attn"] = L.attention_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            cfg.qkv_bias)
+        p["ln2"], ax["ln2"] = L.rmsnorm_init(cfg.d_model)
+        if cfg.n_experts:
+            p["moe"], ax["moe"] = M.moe_init(k2, cfg.d_model, cfg.d_ff,
+                                             cfg.n_experts, cfg.mlp)
+        else:
+            p["mlp"], ax["mlp"] = L.mlp_init(k3, cfg.d_model, cfg.d_ff,
+                                             cfg.mlp)
+    elif kind == "R":
+        k1, k2 = jax.random.split(key)
+        p["ln1"], ax["ln1"] = L.rmsnorm_init(cfg.d_model)
+        p["rec"], ax["rec"] = R.rglru_block_init(
+            k1, cfg.d_model, cfg.lru_width or cfg.d_model, cfg.conv1d_width)
+        p["ln2"], ax["ln2"] = L.rmsnorm_init(cfg.d_model)
+        p["mlp"], ax["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp)
+    elif kind == "W":
+        k1 = key
+        p["ln1"], ax["ln1"] = L.rmsnorm_init(cfg.d_model)
+        p["ln2"], ax["ln2"] = L.rmsnorm_init(cfg.d_model)
+        p["rwkv"], ax["rwkv"] = W.rwkv6_block_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.d_ff)
+    else:
+        raise ValueError(kind)
+    return p, ax
+
+
+def _subblock_apply(p, cfg: ModelConfig, kind: str, x, positions,
+                    mrope_positions=None):
+    """Full-sequence application. Returns (x, aux)."""
+    aux = {}
+    if kind in ("G", "L"):
+        h = L.rmsnorm(p["ln1"], x)
+        h = L.gqa_attention(
+            p["attn"], h, positions, causal=cfg.causal,
+            window=(cfg.window if kind == "L" else 0),
+            theta=cfg.rope_theta,
+            mrope_positions=mrope_positions)
+        x = x + h
+        h = L.rmsnorm(p["ln2"], x)
+        if cfg.n_experts:
+            h, aux = M.moe_apply(p["moe"], h, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 kind=cfg.mlp)
+        else:
+            h = L.mlp(p["mlp"], h, cfg.mlp)
+        x = x + h
+    elif kind == "R":
+        h = L.rmsnorm(p["ln1"], x)
+        h, _ = R.rglru_block(p["rec"], h)
+        x = x + h
+        h = L.rmsnorm(p["ln2"], x)
+        x = x + L.mlp(p["mlp"], h, cfg.mlp)
+    elif kind == "W":
+        h, _ = W.time_mix(p["rwkv"], L.rmsnorm(p["ln1"], x), cfg.n_heads)
+        x = x + h
+        x = x + W.channel_mix(p["rwkv"], L.rmsnorm(p["ln2"], x))
+    return x, aux
+
+
+# ------------------------------------------------------------ decode state
+def _subblock_cache_init(cfg: ModelConfig, kind: str, b: int, max_len: int,
+                         dtype):
+    """Per-sub-layer decode state (the kv_planner sizes the rings)."""
+    if kind == "G":
+        shape = (b, max_len, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "L":
+        ring = min(cfg.window, max_len)
+        shape = (b, ring, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "R":
+        w = cfg.lru_width or cfg.d_model
+        return {"h": jnp.zeros((b, w), jnp.float32),
+                "conv": jnp.zeros((b, cfg.conv1d_width - 1, w), dtype)}
+    if kind == "W":
+        hd = cfg.d_model // cfg.n_heads
+        return {"s": jnp.zeros((b, cfg.n_heads, hd, hd), jnp.float32),
+                "tm_prev": jnp.zeros((b, 1, cfg.d_model), dtype),
+                "cm_prev": jnp.zeros((b, 1, cfg.d_model), dtype)}
+    raise ValueError(kind)
+
+
+def _subblock_decode(p, cfg: ModelConfig, kind: str, x, cache, pos):
+    aux = {}
+    if kind in ("G", "L"):
+        h = L.rmsnorm(p["ln1"], x)
+        h, ck, cv = L.gqa_decode_step(
+            p["attn"], h, cache["k"], cache["v"], pos,
+            window=(cfg.window if kind == "L" else 0), theta=cfg.rope_theta)
+        cache = {"k": ck, "v": cv}
+        x = x + h
+        h = L.rmsnorm(p["ln2"], x)
+        if cfg.n_experts:
+            h, aux = M.moe_apply(p["moe"], h, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 kind=cfg.mlp)
+        else:
+            h = L.mlp(p["mlp"], h, cfg.mlp)
+        x = x + h
+    elif kind == "R":
+        h = L.rmsnorm(p["ln1"], x)
+        h, hs, conv = R.rglru_decode(p["rec"], h, cache["h"], cache["conv"])
+        cache = {"h": hs, "conv": conv}
+        x = x + h
+        h = L.rmsnorm(p["ln2"], x)
+        x = x + L.mlp(p["mlp"], h, cfg.mlp)
+    elif kind == "W":
+        h_in = L.rmsnorm(p["ln1"], x)
+        h, s = W.time_mix_decode(p["rwkv"], h_in, cfg.n_heads, cache["s"],
+                                 cache["tm_prev"])
+        x = x + h
+        c_in = L.rmsnorm(p["ln2"], x)
+        # channel-mix with explicit shift state
+        mu = p["rwkv"]["cm_mu"].astype(x.dtype)
+        xk = c_in * mu[0] + cache["cm_prev"] * (1 - mu[0])
+        xr = c_in * mu[1] + cache["cm_prev"] * (1 - mu[1])
+        kk = jnp.square(jax.nn.relu(xk @ p["rwkv"]["cm_k"].astype(x.dtype)))
+        cm = jax.nn.sigmoid(xr @ p["rwkv"]["cm_r"].astype(x.dtype)) * (
+            kk @ p["rwkv"]["cm_v"].astype(x.dtype))
+        x = x + cm
+        cache = {"s": s, "tm_prev": h_in, "cm_prev": c_in}
+    return x, cache, aux
+
+
+# ------------------------------------------------------------------ model
+class Model:
+    """init / forward / loss / decode for one ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.segments = plan_segments(cfg)
+
+    # ---------------------------------------------------------------- init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.segments) + 3)
+        params: dict[str, Any] = {}
+        params["embed"], self._embed_ax = L.embed_init(
+            keys[0], cfg.vocab, cfg.d_model)
+        segs = []
+        for si, seg in enumerate(self.segments):
+            def init_superblock(k):
+                sks = jax.random.split(k, len(seg.kinds))
+                return [
+                    _subblock_init(sk, cfg, kind)[0]
+                    for sk, kind in zip(sks, seg.kinds)]
+            sb_keys = jax.random.split(keys[1 + si], seg.n)
+            segs.append(jax.vmap(init_superblock)(sb_keys))
+        params["segments"] = segs
+        params["final_ln"], _ = L.rmsnorm_init(cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L._init(keys[-1], (cfg.d_model, cfg.vocab),
+                                        scale=1.0 / math.sqrt(cfg.d_model))
+        return params
+
+    def _subblock_axes(self, kind: str):
+        """Axes without materializing parameters (safe under set_mesh —
+        concrete inits would replicate constants across all devices)."""
+        box = {}
+
+        def f(k):
+            p, ax = _subblock_init(k, self.cfg, kind)
+            box["ax"] = ax
+            return p
+        jax.eval_shape(f, jax.random.PRNGKey(0))
+        return box["ax"]
+
+    def logical_axes(self, params) -> Any:
+        """Trailing-dim logical axes per leaf (stack dims -> None)."""
+        ax: dict[str, Any] = {"embed": {"table": ("vocab", "embed")},
+                              "final_ln": {"scale": ("embed",)}}
+        ax["segments"] = [[self._subblock_axes(kind) for kind in seg.kinds]
+                          for seg in self.segments]
+        if "lm_head" in params:
+            ax["lm_head"] = ("embed", "vocab")
+        return ax
+
+    # ------------------------------------------------------------- forward
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        if cfg.frontend_stub and cfg.family == "encoder":
+            x = batch["frame_embeds"].astype(dt)
+        else:
+            x = L.embed(params["embed"], batch["tokens"], dt)
+            x = x * math.sqrt(cfg.d_model)
+            if cfg.family == "vlm" and "vision_embeds" in batch:
+                nv = batch["vision_embeds"].shape[1]
+                x = x.at[:, :nv].set(batch["vision_embeds"].astype(dt))
+        b, s = x.shape[:2]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        mrope = batch.get("mrope_positions") if cfg.mrope else None
+        return x, positions, mrope
+
+    def _hidden(self, params, batch):
+        """Run the layer stack; return (final hidden states, aux loss)."""
+        cfg = self.cfg
+        x, positions, mrope = self._embed_inputs(params, batch)
+        aux_acc = jnp.zeros((), jnp.float32)
+
+        for seg, seg_params in zip(self.segments, params["segments"]):
+            def body(carry, sb_params):
+                # batch on DP + d_model on 'model': the scan carry is the
+                # per-layer residual stash, so sharding it over BOTH mesh
+                # axes is what keeps 56-layer stashes within HBM
+                h = L.shard_dim(carry, -1)
+                a = jnp.zeros((), jnp.float32)
+                for kind, sp in zip(seg.kinds, sb_params):
+                    h, aux = _subblock_apply(sp, cfg, kind, h, positions,
+                                             mrope)
+                    if aux:
+                        a = a + aux["load_balance"] + 1e-3 * aux["router_z"]
+                return h, a
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, auxs = jax.lax.scan(body, x, seg_params)
+            aux_acc = aux_acc + jnp.sum(auxs)
+
+        x = L.rmsnorm(params["final_ln"], x)
+        return x, aux_acc
+
+    def forward(self, params, batch):
+        x, aux_acc = self._hidden(params, batch)
+        logits = L.unembed(params["embed"], x.astype(jnp.float32),
+                           params.get("lm_head"))
+        return logits, aux_acc
+
+    # sequence-chunk size for the cross-entropy when S*V is large: the
+    # (B, S, V) fp32 logits of a 262k vocab at 4k seq are ~13 GiB of
+    # temps per device otherwise (EXPERIMENTS.md §Perf iteration 1)
+    LOSS_CHUNK = 512
+
+    def _ce_from_hidden(self, params, x, labels, mask):
+        """Chunked CE: unembed + logsumexp one sequence slice at a time."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        chunk = self.LOSS_CHUNK
+        if s <= 2 * chunk or s % chunk != 0:
+            logits = L.unembed(params["embed"], x.astype(jnp.float32),
+                               params.get("lm_head"))
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[..., None],
+                                       axis=-1)[..., 0]
+            return logz - gold
+        nc = s // chunk
+        xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def one(carry, inp):
+            xi, li = inp
+            logits = L.unembed(params["embed"], xi.astype(jnp.float32),
+                               params.get("lm_head"))
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, li[..., None],
+                                       axis=-1)[..., 0]
+            return carry, logz - gold
+        _, nll = jax.lax.scan(one, 0.0, (xc, lc))
+        return nll.transpose(1, 0, 2).reshape(b, s)
+
+    def loss(self, params, batch):
+        x, aux = self._hidden(params, batch)
+        labels = batch["labels"]
+        nll = self._ce_from_hidden(params, x, labels,
+                                   batch.get("loss_mask"))
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            nll = nll * mask
+            denom = jnp.maximum(mask.sum(), 1.0)
+        else:
+            denom = float(nll.size)
+        loss = nll.sum() / denom + 0.01 * aux
+        return loss, {"nll": nll.sum() / denom, "aux": aux}
+
+    # -------------------------------------------------------------- decode
+    def decode_init(self, b: int, max_len: int):
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        caches = []
+        for seg in self.segments:
+            def one(kind):
+                return _subblock_cache_init(cfg, kind, b, max_len, dt)
+            sb = [jax.tree.map(lambda x: jnp.broadcast_to(
+                x[None], (seg.n,) + x.shape), one(kind))
+                for kind in seg.kinds]
+            caches.append(sb)
+        return caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        """tokens: (B,), pos: (B,) -> (logits (B, V), new caches)."""
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        x = L.embed(params["embed"], tokens[:, None], dt)
+        x = x * math.sqrt(cfg.d_model)
+
+        new_caches = []
+        for seg, seg_params, seg_cache in zip(self.segments,
+                                              params["segments"], caches):
+            def body(carry, scan_in):
+                h = carry
+                sb_params, sb_cache = scan_in
+                new_sb = []
+                for kind, sp, sc in zip(seg.kinds, sb_params, sb_cache):
+                    h, nc, _ = _subblock_decode(sp, cfg, kind, h, sc, pos)
+                    new_sb.append(nc)
+                return h, new_sb
+            x, nc = jax.lax.scan(body, x, (seg_params, seg_cache))
+            new_caches.append(nc)
+
+        x = L.rmsnorm(params["final_ln"], x)
+        logits = L.unembed(params["embed"], x.astype(jnp.float32),
+                           params.get("lm_head"))
+        return logits[:, 0], new_caches
+
+    # --------------------------------------------------------------- stats
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    def active_param_count(self, params) -> int:
+        """MoE: only top_k of n_experts count as active."""
+        cfg = self.cfg
+        total = 0
+        for x in jax.tree.leaves(params):
+            total += x.size
+        if not cfg.n_experts:
+            return total
+        expert_leaves = sum(
+            x.size for x in jax.tree.leaves(
+                [sb.get("moe", {}) for seg in params["segments"]
+                 for sb in (seg if isinstance(seg, list) else [seg])])
+            if hasattr(x, "size"))
+        # fraction of expert weights that fire per token
+        frac = cfg.top_k / cfg.n_experts
+        # router stays dense
+        return int(total - expert_leaves * (1.0 - frac))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

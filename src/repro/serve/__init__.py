@@ -1,0 +1,2 @@
+from .engine import Completed, Engine, Request
+from .kv_planner import KVPlan, plan_kv

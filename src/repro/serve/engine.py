@@ -1,0 +1,123 @@
+"""Batched serving engine: slot-based continuous batching (lite).
+
+A fixed pool of B slots; requests occupy slots, prefill runs as a scanned
+sequence of decode steps (one compile, any prompt length), generation
+steps all active slots together. Ring KV caches come from the kv_planner
+(ImaGen-sized); finished slots free immediately (continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+from repro.models.transformer import Model
+
+from .kv_planner import KVPlan, plan_kv
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new: int = 16
+    temperature: float = 0.0     # 0 = greedy
+
+
+@dataclasses.dataclass
+class Completed:
+    rid: int
+    tokens: list[int]
+
+
+class Engine:
+    def __init__(self, model: Model, params: Any, n_slots: int,
+                 max_len: int, seed: int = 0):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.kv_plan: KVPlan = plan_kv(self.cfg, max_len)
+        self.caches = model.decode_init(n_slots, max_len)
+        self.pos = np.zeros((n_slots,), np.int64)
+        self.active = np.zeros((n_slots,), bool)
+        self.req: list[Request | None] = [None] * n_slots
+        self.out_tokens: list[list[int]] = [[] for _ in range(n_slots)]
+        self.last_token = np.zeros((n_slots,), np.int64)
+        self.key = jax.random.PRNGKey(seed)
+        self._step = jax.jit(model.decode_step)
+
+        def prefill(params, caches, tokens, start_pos, slot):
+            """Scan decode steps over a prompt for ONE slot (batched via
+            masking: other slots get position-preserving no-ops)."""
+            def body(carry, tok):
+                caches, pos = carry
+                toks_b = jnp.zeros((self.n_slots,), jnp.int32).at[slot].set(tok)
+                logits, caches = model.decode_step(params, caches, toks_b, pos)
+                pos = pos.at[slot].add(1)
+                return (caches, pos), logits[slot]
+            (caches, pos), logits = jax.lax.scan(body, (caches, start_pos),
+                                                 tokens)
+            return caches, pos, logits[-1]
+        self._prefill = jax.jit(prefill)
+
+    # ------------------------------------------------------------ requests
+    def add_request(self, req: Request) -> bool:
+        free = np.nonzero(~self.active)[0]
+        if len(free) == 0:
+            return False
+        slot = int(free[0])
+        pos = jnp.asarray(np.where(self.active, self.pos, 0), jnp.int32)
+        caches, new_pos, last_logits = self._prefill(
+            self.params, self.caches, jnp.asarray(req.prompt, jnp.int32),
+            pos, slot)
+        self.caches = caches
+        self.pos[slot] = len(req.prompt)
+        self.active[slot] = True
+        self.req[slot] = req
+        self.out_tokens[slot] = []
+        self.last_token[slot] = int(jnp.argmax(last_logits))
+        self.out_tokens[slot].append(int(self.last_token[slot]))
+        return True
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> list[Completed]:
+        if not self.active.any():
+            return []
+        toks = jnp.asarray(self.last_token, jnp.int32)
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.caches = self._step(self.params, self.caches, toks, pos)
+        self.key, sub = jax.random.split(self.key)
+        greedy = jnp.argmax(logits, axis=-1)
+        sampled = jax.random.categorical(sub, logits / 0.8, axis=-1)
+        done: list[Completed] = []
+        for s in range(self.n_slots):
+            if not self.active[s]:
+                continue
+            r = self.req[s]
+            tok = int(sampled[s] if r.temperature > 0 else greedy[s])
+            self.out_tokens[s].append(tok)
+            self.last_token[s] = tok
+            self.pos[s] += 1
+            if len(self.out_tokens[s]) >= r.max_new or \
+                    self.pos[s] >= self.max_len - 1:
+                done.append(Completed(rid=r.rid, tokens=self.out_tokens[s]))
+                self.active[s] = False
+                self.req[s] = None
+        return done
+
+    def run(self, requests: list[Request]) -> dict[int, list[int]]:
+        """Submit everything, drain to completion (test/benchmark entry)."""
+        pending = list(requests)
+        results: dict[int, list[int]] = {}
+        while pending or self.active.any():
+            while pending and self.add_request(pending[0]):
+                pending.pop(0)
+            for c in self.step():
+                results[c.rid] = c.tokens
+        return results

@@ -1,0 +1,2 @@
+from .optimizer import OptConfig, adamw_update, init_opt_state, lr_schedule
+from .train_loop import make_train_state, make_train_step

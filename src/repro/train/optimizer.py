@@ -1,0 +1,101 @@
+"""AdamW + gradient clipping + schedules, in pure JAX (no optax here).
+
+Mixed precision: params kept in bf16 for compute, optimizer holds fp32
+master copies + moments (the standard large-model recipe). The optimizer
+state is a plain pytree so checkpointing/resharding stay trivial.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(params: Any) -> dict:
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path_leaf) -> bool:
+    """No weight decay on norms/biases/1-d tensors."""
+    return path_leaf.ndim >= 2
+
+
+def adamw_update(cfg: OptConfig, params: Any, grads: Any, state: dict
+                 ) -> tuple[Any, dict, dict]:
+    """Returns (new bf16/compute params, new state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.betas
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if _decay_mask(master):
+            delta = delta + cfg.weight_decay * master
+        master = master - lr * delta
+        return m, v, master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_ma = jax.tree.leaves(state["master"])
+    new_m, new_v, new_ma = [], [], []
+    for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma):
+        m2, v2, ma2 = upd(g, m, v, ma)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_ma.append(ma2)
+    new_state = {
+        "step": step,
+        "master": jax.tree.unflatten(treedef, new_ma),
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+    }
+    flat_p = jax.tree.leaves(params)
+    new_params = jax.tree.unflatten(
+        treedef, [ma.astype(p.dtype) for ma, p in zip(new_ma, flat_p)])
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

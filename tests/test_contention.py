@@ -1,0 +1,67 @@
+"""Contention model: access sets, arithmetization (fixed Eq. 12), oracle."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.contention import (Accessor, access_set, causality_delay,
+                                   count_line_accesses, first_line,
+                                   max_concurrent_accesses,
+                                   pair_disjoint_oracle, required_delay)
+
+
+def test_first_line_matches_paper_eq3():
+    # L = ceil((t - S)/W)
+    assert first_line(0, 0, 10) == 0
+    assert first_line(0, 1, 10) == 1
+    assert first_line(0, 10, 10) == 1
+    assert first_line(0, 11, 10) == 2
+    assert first_line(5, 3, 10) == 0   # t < S clamps negative via ceil
+
+
+def test_access_set_height():
+    a = access_set(0, 3, 25, 10)
+    assert list(a) == [3, 4, 5]
+
+
+@given(w=st.integers(4, 32), sh_late=st.integers(1, 6),
+       s_early=st.integers(0, 40), extra=st.integers(0, 50),
+       sh_early=st.integers(1, 6))
+@settings(max_examples=200, deadline=None)
+def test_fixed_eq12_sufficient(w, sh_late, s_early, extra, sh_early):
+    """S_late - S_early >= W*sh_late  =>  access sets disjoint forever."""
+    s_late = s_early + required_delay(sh_late, w) + extra
+    t_max = s_late + 4 * w * (sh_late + sh_early) + 2 * w
+    assert pair_disjoint_oracle(s_early, sh_early, s_late, sh_late, w, t_max)
+
+
+@given(w=st.integers(4, 32), sh_late=st.integers(2, 6), s_early=st.integers(0, 40))
+@settings(max_examples=100, deadline=None)
+def test_papers_printed_eq12_insufficient(w, sh_late, s_early):
+    """The PAPER's printed Eq. 12 uses SH of the earlier stage (writer: 1),
+    which admits overlapping schedules — evidence it is a typo."""
+    sh_early = 1  # the writer
+    s_late = s_early + w * sh_early  # printed form: W * SH_j (earlier stage)
+    t_max = s_late + 4 * w * (sh_late + 1) + 2 * w
+    # with sh_late >= 2 the sets must overlap at some cycle
+    assert not pair_disjoint_oracle(s_early, sh_early, s_late, sh_late, w, t_max)
+
+
+def test_count_line_accesses_fig6():
+    """Paper Fig. 6: K0 writer, K1 (sh=3), K2 (sh=3) reading one buffer."""
+    w = 10
+    accs = [(0, Accessor("k0", 1, is_writer=True)),
+            (causality_delay(3, w), Accessor("k1", 3)),
+            (causality_delay(3, w), Accessor("k2", 3))]
+    # ASAP schedule (both consumers start together): some line must see 3
+    # accesses — the stall the paper's scheduling eliminates (Fig. 2)
+    worst = max_concurrent_accesses(accs, w, 0, 200)
+    assert worst >= 3
+
+
+def test_disjoint_schedule_bounds_accesses():
+    w = 10
+    accs = [(0, Accessor("k0", 1, is_writer=True)),
+            (causality_delay(3, w), Accessor("k1", 3)),
+            (causality_delay(3, w) + required_delay(3, w), Accessor("k2", 3))]
+    worst = max_concurrent_accesses(accs, w, 0, 400)
+    assert worst <= 2

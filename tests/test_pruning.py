@@ -1,0 +1,50 @@
+"""Constraint pruning: soundness (same optimum) + the paper's Fig. 6 case."""
+import pytest
+
+from repro.core import algorithms
+from repro.core.dsl import Pipeline
+from repro.core.ilp import build_problem, solve_schedule
+from repro.core.pruning import build_port_constraints
+
+
+def test_fig6_collapses_to_single_constraint():
+    """Paper Fig. 6: buffer with writer K0 + readers K1,K2 (both sh=3),
+    K0 <= K1 <= K2: pruning must keep exactly A_0 ∩ A_2 = ∅."""
+    p = Pipeline("fig6")
+    k0 = p.input("k0")
+    k1 = p.stage("k1", [(k0, 3, 3)], algorithms.identity_fn)
+    k2 = p.stage("k2", [(k0, 3, 3), (k1, 1, 1)], algorithms.identity_fn)
+    p.output("out", [(k2, 1, 1)])
+    dag = p.build()
+    pp = build_port_constraints(dag, 8, {s: 2 for s in dag.stages})
+    k0_constraints = [c for c in pp.hard if c.early == "k0" or c.late == "k0"]
+    assert any(c.early == "k0" and c.late == "k2" and c.lines == 3
+               for c in pp.hard)
+    # no OR-group left for k0's buffer
+    assert not any(g.buffer == "k0" for g in pp.groups)
+
+
+@pytest.mark.parametrize("name", list(algorithms.ALGORITHMS))
+def test_pruning_preserves_optimum(name):
+    dag = algorithms.ALGORITHMS[name]()
+    w = 16
+    pruned = solve_schedule(build_problem(dag, w, ports=2, prune=True))
+    full = solve_schedule(build_problem(dag, w, ports=2, prune=False))
+    assert pruned.total_pixels == full.total_pixels
+
+
+@pytest.mark.parametrize("name", ["canny-m", "denoise-m", "harris-m"])
+def test_pruning_reduces_branches(name):
+    dag = algorithms.ALGORITHMS[name]()
+    pruned = solve_schedule(build_problem(dag, 16, ports=2, prune=True))
+    full = solve_schedule(build_problem(dag, 16, ports=2, prune=False))
+    assert pruned.n_branches <= full.n_branches
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_pruning_preserves_optimum_synthetic(seed):
+    dag = algorithms.synthetic_pipeline(10, seed=seed)
+    w = 8
+    pruned = solve_schedule(build_problem(dag, w, ports=2, prune=True))
+    full = solve_schedule(build_problem(dag, w, ports=2, prune=False))
+    assert pruned.total_pixels == full.total_pixels

@@ -1,0 +1,70 @@
+"""Simulator: detects injected R1/R2/R3 violations; validates clean plans."""
+import dataclasses
+
+import pytest
+
+from repro.core import DP, algorithms, compile_pipeline
+from repro.core.ilp import Schedule, build_problem, solve_schedule
+from repro.core.simulate import simulate
+
+
+def _plan(name="unsharp-m", w=32):
+    dag = algorithms.ALGORITHMS[name]()
+    return dag, compile_pipeline(dag, w, mem=DP)
+
+
+def test_clean_plan_simulates_ok():
+    dag, plan = _plan()
+    rep = simulate(dag, plan.schedule, plan.w, 64, alloc=plan.alloc,
+                   cfg_of=plan.mem_cfg)
+    assert rep.ok
+    assert rep.throughput == 1.0
+
+
+def test_r1_violation_detected():
+    dag, plan = _plan()
+    s = dict(plan.schedule.starts)
+    s["bx"] = 0  # reads `in` the same cycle it is produced
+    bad = dataclasses.replace(plan.schedule, starts=s)
+    rep = simulate(dag, bad, plan.w, 64, alloc=plan.alloc, cfg_of=plan.mem_cfg)
+    assert not rep.ok
+    assert any("R1" in v for v in rep.violations)
+
+
+def test_r2_violation_detected():
+    dag, plan = _plan()
+    lines = dict(plan.schedule.buffer_lines)
+    lines["in"] = 1  # ring far too small for the delayed consumer
+    bad = dataclasses.replace(plan.schedule, buffer_lines=lines)
+    rep = simulate(dag, bad, plan.w, 64)  # no alloc: n_phys from schedule
+    assert not rep.ok
+    assert any("R2" in v for v in rep.violations)
+
+
+def test_r3_violation_detected():
+    """ASAP schedule (ignore port constraints) on an MC pipeline stalls."""
+    dag = algorithms.ALGORITHMS["denoise-m"]()
+    w = 32
+    from repro.core.contention import causality_delay
+    starts = {}
+    for st in dag.topo_order:
+        ins = dag.in_edges(st)
+        starts[st] = 0 if not ins else max(
+            starts[e.producer] + causality_delay(e.sh, w) for e in ins)
+    prob = build_problem(dag, w, ports=2)
+    ref = solve_schedule(prob)
+    asap = dataclasses.replace(ref, starts=starts,
+                               buffer_lines={p: max(v, 1) for p, v in
+                                             ref.buffer_lines.items()})
+    rep = simulate(dag, asap, w, 64)
+    assert not rep.ok
+    assert any("R3" in v for v in rep.violations)
+
+
+def test_latency_close_to_asap():
+    """Paper Sec. 8.1: +0.01% latency over Darkroom/SODA — i.e. tiny."""
+    dag, plan = _plan("canny-m", w=480)
+    rep = plan.verify(320)
+    # latency = output start + W*H; output start is a few lines, frame is
+    # 153k cycles: overhead must be < 5%
+    assert rep.output_start < 0.05 * 480 * 320

@@ -1,0 +1,45 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# Debug: list the largest tensors in a compiled dry-run cell's HLO.
+import argparse
+import re
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", required=True)
+ap.add_argument("--shape", default="train_4k")
+ap.add_argument("--top", type=int, default=25)
+args = ap.parse_args()
+
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh()
+res = dryrun.lower_cell(args.arch, args.shape, mesh, "pod", verbose=False)
+print("status:", res.status, "temp GiB:", res.temp_bytes / (1 << 30))
+txt = res._compiled.as_text()
+
+BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+         "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8}
+pat = re.compile(r"%?([\w.\-]+) = (f32|bf16|f16|s32|u32|s64|pred|u8|s8)"
+                 r"\[([\d,]+)\]\S* (\w[\w\-]*)\(")
+sizes = []
+for m in pat.finditer(txt):
+    name, dt, dims, op = m.groups()
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    sizes.append((n * BYTES[dt], dt, dims, op, name[:60]))
+sizes.sort(reverse=True)
+seen = set()
+print(f"{'GiB':>8s}  {'dtype':6s} {'op':22s} shape")
+shown = 0
+for s, dt, dims, op, name in sizes:
+    key = (dt, dims, op)
+    if key in seen:
+        continue
+    seen.add(key)
+    print(f"{s/(1<<30):8.2f}  {dt:6s} {op:22s} [{dims}]  {name}")
+    shown += 1
+    if shown >= args.top:
+        break

@@ -1,0 +1,85 @@
+"""Run the full dry-run matrix, one subprocess per cell (isolation),
+merging per-cell JSON into results/dryrun.json.
+
+    PYTHONPATH=src python tools/run_matrix.py --mesh both
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ARCHS = ["hubert-xlarge", "qwen2.5-3b", "gemma3-1b", "phi4-mini-3.8b",
+         "granite-3-2b", "rwkv6-1.6b", "qwen2-vl-7b", "recurrentgemma-2b",
+         "granite-moe-1b-a400m", "mixtral-8x22b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--only-failures", action="store_true",
+                    help="rerun only cells missing/failed in --out")
+    args = ap.parse_args()
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs("results/cells", exist_ok=True)
+    existing = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for c in json.load(f):
+                existing[(c["arch"], c["shape"], c["mesh"])] = c
+
+    results = []
+    t_start = time.time()
+    for mesh in meshes:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                key = (arch, shape, mesh)
+                cell_path = f"results/cells/{arch}_{shape}_{mesh}.json"
+                if args.only_failures and key in existing and \
+                        not existing[key]["status"].startswith("FAIL"):
+                    results.append(existing[key])
+                    continue
+                if os.path.exists(cell_path) and not args.only_failures:
+                    with open(cell_path) as f:
+                        cs = json.load(f)
+                    if not any(c["status"].startswith("FAIL") for c in cs):
+                        results.extend(cs)
+                        print(f"[cached] {arch} x {shape} x {mesh}")
+                        continue
+                t0 = time.time()
+                r = subprocess.run(
+                    [sys.executable, "-m", "repro.launch.dryrun",
+                     "--arch", arch, "--shape", shape, "--mesh", mesh,
+                     "--out", cell_path],
+                    capture_output=True, text=True, timeout=3000)
+                if os.path.exists(cell_path):
+                    with open(cell_path) as f:
+                        cells = json.load(f)
+                    results.extend(cells)
+                    for c in cells:
+                        print(f"{arch} x {shape} x {mesh}: {c['status'][:60]}"
+                              f" ({time.time()-t0:.0f}s)", flush=True)
+                else:
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": mesh,
+                                    "status": f"FAIL: rc={r.returncode} "
+                                    + r.stderr[-300:]})
+                    print(f"{arch} x {shape} x {mesh}: CRASH rc="
+                          f"{r.returncode}", flush=True)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    n_fail = sum(1 for c in results if c["status"].startswith("FAIL"))
+    print(f"total {time.time()-t_start:.0f}s; cells={len(results)} "
+          f"fail={n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
