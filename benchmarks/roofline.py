@@ -43,7 +43,9 @@ def counts(arch: str):
     cfg, model = _cfg_model(arch)
     shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
     total = expert = 0
-    for path, leaf in jax.tree.flatten_with_path(shapes)[0]:
+    # jax.tree.flatten_with_path only exists in newer jax; the tree_util
+    # spelling works across the versions this repo supports
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
         keys = "/".join(str(k) for k in path)
         if "embed/table" in keys or len(leaf.shape) < 2:
             continue

@@ -1,0 +1,43 @@
+"""Frame-serving quickstart: compile once, stream frames.
+
+    PYTHONPATH=src python examples/stream_frames.py
+
+Walks the three layers of the imaging subsystem on one pipeline:
+a PlanCache hit/miss, a tiled oversize frame, and a FrameEngine draining
+a small burst with continuous batching.
+"""
+import numpy as np
+
+from repro.imaging import FrameEngine, FrameRequest, PlanCache, execute_tiled
+from repro.kernels import ref
+
+rng = np.random.RandomState(0)
+
+# 1. plan cache: the second lookup is a pure cache hit
+cache = PlanCache()
+plan = cache.plan_for("canny-m", w=48)
+plan2 = cache.plan_for("canny-m", w=48)
+assert plan is plan2
+print(f"plan {plan.dag.name} W={plan.w}: {plan.total_alloc_bits} bits, "
+      f"fingerprint {plan.fingerprint()[:12]}, "
+      f"stats {cache.stats.snapshot()}")
+
+# 2. tiled execution: a 100x140 frame through the 48-wide compiled plan
+frame = rng.rand(100, 140).astype(np.float32)
+out = execute_tiled(cache, "canny-m", {"in": frame}, tile_h=40, tile_w=48)
+exp = ref.stencil_pipeline_ref(cache.dag_for("canny-m"), {"in": frame})
+print(f"tiled 100x140 frame: max|err| vs reference = "
+      f"{float(np.max(np.abs(np.asarray(out) - np.asarray(exp)))):.2e}")
+
+# 3. engine: a burst of mixed-pipeline requests, batched per pipeline
+eng = FrameEngine(cache=cache, max_batch=4, max_pending=16,
+                  tile_shape=(40, 48))
+reqs = [FrameRequest(rid=i, pipeline=["canny-m", "unsharp-m"][i % 2],
+                     frames={"in": rng.rand(32, 48).astype(np.float32)})
+        for i in range(10)]
+results = eng.run(reqs)
+snap = eng.metrics.snapshot()
+print(f"engine: {snap['frames_completed']} frames in {snap['batches']} "
+      f"batches, fill {snap['mean_batch_fill']:.2f}, "
+      f"{snap['fps_execute']:.1f} f/s (execute), "
+      f"VMEM high-water {snap['vmem_high_water_bytes']} B")

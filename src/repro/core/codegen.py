@@ -10,6 +10,8 @@ accessor maps — plus a human-readable pseudo-RTL dump for inspection.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Mapping
 
 from .dag import PipelineDAG
@@ -17,6 +19,27 @@ from .ilp import Schedule, build_problem, solve_schedule
 from .linebuffer import DP, Allocation, MemConfig, allocate
 from .power import memory_area, memory_power
 from .simulate import SimReport, simulate
+
+
+def mem_cfg_key(mem: MemConfig | Mapping[str, MemConfig]) -> tuple:
+    """Stable, hashable identity of a memory-config combo.
+
+    This is the "mem" leg of a plan-cache key. A single MemConfig keys
+    as its field tuple; a per-stage mapping keys as a sorted tuple of
+    (stage, field tuple) — except that a mapping assigning the same
+    config to every stage collapses to the uniform key, so a compiled
+    plan's fully-expanded ``mem_cfg`` keys identically to the uniform
+    spec it came from. (A *partial* mapping that compile_pipeline would
+    fill with DP defaults still keys distinctly: the stage set is not
+    known here.)
+    """
+    if isinstance(mem, MemConfig):
+        return ("uniform", dataclasses.astuple(mem))
+    cfgs = {dataclasses.astuple(c) for c in mem.values()}
+    if len(cfgs) == 1:
+        return ("uniform", next(iter(cfgs)))
+    return ("per-stage", tuple(sorted(
+        (s, dataclasses.astuple(c)) for s, c in mem.items())))
 
 
 @dataclasses.dataclass
@@ -42,6 +65,40 @@ class PipelinePlan:
     def verify(self, h: int) -> SimReport:
         return simulate(self.dag, self.schedule, self.w, h,
                         alloc=self.alloc, cfg_of=self.mem_cfg)
+
+    @property
+    def cache_key(self) -> tuple:
+        """(pipeline name, width, mem combo) — the plan-cache identity."""
+        return (self.dag.name, self.w, mem_cfg_key(self.mem_cfg))
+
+    def to_dict(self) -> dict:
+        """JSON-serializable structural summary of the compiled plan.
+
+        The stage compute payloads (python closures) are deliberately not
+        serialized — a plan dict describes the *accelerator* (schedule,
+        rings, blocks), which is what persists across processes; payloads
+        are re-bound from the pipeline registry by name.
+        """
+        return {
+            "pipeline": self.dag.name,
+            "w": self.w,
+            "schedule": dict(self.schedule.starts),
+            "buffers": {
+                p: {"n_lines": b.n_lines, "n_lines_phys": b.n_lines_phys,
+                    "pack": b.pack, "n_blocks": b.n_blocks,
+                    "bits_per_block": b.bits_per_block,
+                    "window_regs": b.window_regs, "cfg": b.cfg.name,
+                    "ports": b.cfg.ports}
+                for p, b in self.alloc.buffers.items()},
+            "mem_cfg": {s: c.name for s, c in self.mem_cfg.items()},
+            "total_alloc_bits": self.total_alloc_bits,
+        }
+
+    def fingerprint(self) -> str:
+        """sha256 over the canonical plan dict — change detection for
+        serialized plans and cache-consistency assertions."""
+        blob = json.dumps(self.to_dict(), sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()
 
     def pseudo_rtl(self) -> str:
         """Textual dump in the spirit of the generated Verilog."""

@@ -125,6 +125,27 @@ class PipelineDAG:
     def num_stages(self) -> int:
         return len(self.stages)
 
+    def cumulative_extent(self) -> tuple[int, int]:
+        """(up, left) dependency halo of the output on the input image.
+
+        Windows are causal (bottom-right aligned): stage output pixel
+        (r, x) reads producer rows r-sh+1..r and cols x-sw+1..x. Chaining
+        edges therefore accumulates (sh-1, sw-1) per hop; joins take the
+        max over in-edges. The result is the halo a tile executor must
+        prepend (above/left) so every output pixel of the tile sees its
+        full input dependency cone.
+        """
+        ext: dict[str, tuple[int, int]] = {}
+        for name in self.topo_order:
+            ins = self.in_edges(name)
+            if not ins:
+                ext[name] = (0, 0)
+                continue
+            ext[name] = (
+                max(ext[e.producer][0] + e.sh - 1 for e in ins),
+                max(ext[e.producer][1] + e.sw - 1 for e in ins))
+        return ext[self.output_stages()[0]]
+
     def validate(self) -> None:
         for n, s in self.stages.items():
             ins, outs = self.in_edges(n), self.out_edges(n)

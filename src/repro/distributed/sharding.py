@@ -180,7 +180,7 @@ def cache_specs(model: Model, cache_shape: Any, mesh: Mesh) -> Any:
         # recurrent states (rwkv s/tm_prev/cm_prev, rglru h/conv): batch only
         return P(None, batch_ax, *([None] * (rank - 2)))
 
-    flat, treedef = jax.tree.flatten_with_path(cache_shape)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
     return jax.tree.unflatten(treedef, [spec(p, l) for p, l in flat])
 
 

@@ -1,0 +1,145 @@
+"""FrameEngine: slot-based continuous batching for stencil pipelines.
+
+The frame analogue of serve/engine.py: where the LM engine multiplexes
+token streams over KV-cache slots, the FrameEngine multiplexes frame
+requests over compiled-plan executors. The paper's accelerator compiles
+once and then streams frames; here the compiled artifact (plan + jitted
+Pallas kernel) lives in a PlanCache and the engine's job is purely
+scheduling:
+
+  * **admission** — per-pipeline bounded FIFOs; a full queue refuses the
+    request (backpressure to the caller) instead of growing without bound.
+  * **batch assembly** — each ``step()`` picks the pipeline whose head
+    request is oldest, then fills up to ``max_batch`` slots with same-shape
+    frames from that queue (FIFO, so per-pipeline completion order equals
+    submission order). Partial batches run with zero-filled idle slots —
+    the executor is compiled once at ``max_batch`` and reused.
+  * **tiling dispatch** — frames no larger than ``tile_shape`` run through
+    the batched executor directly; larger frames go through the tiled
+    executor one request at a time (each frame's tiles ride the batched
+    kernel, so slots stay full either way).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.scheduling import BoundedFifo, assemble_batch
+
+from .metrics import EngineMetrics
+from .plan_cache import PlanCache
+from .tiling import execute_tiled
+
+
+@dataclasses.dataclass
+class FrameRequest:
+    rid: int
+    pipeline: str
+    frames: Mapping[str, np.ndarray]      # {input name: (H, W)}
+    submitted_at: float = 0.0             # stamped by the engine
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return tuple(next(iter(self.frames.values())).shape)
+
+
+@dataclasses.dataclass
+class CompletedFrame:
+    rid: int
+    pipeline: str
+    output: jnp.ndarray
+    latency_s: float
+
+
+class FrameEngine:
+    def __init__(self, cache: PlanCache | None = None,
+                 max_batch: int = 4, max_pending: int = 64,
+                 tile_shape: tuple[int, int] = (128, 128)):
+        self.cache = cache if cache is not None else PlanCache()
+        self.max_batch = max_batch
+        self.max_pending = max_pending
+        self.tile_shape = tile_shape
+        self._queues: dict[str, BoundedFifo] = {}
+        self.metrics = EngineMetrics()
+
+    # ------------------------------------------------------------ admission
+    def submit(self, req: FrameRequest) -> bool:
+        """Enqueue a request; False means the engine is saturated (retry
+        after draining a step) — the backpressure contract. Malformed
+        requests (unknown pipeline, wrong input names) raise here, at
+        admission, so they can never poison an assembled batch."""
+        needed = set(self.cache.dag_for(req.pipeline).input_stages())
+        if not needed <= set(req.frames):
+            raise ValueError(
+                f"request {req.rid}: pipeline {req.pipeline!r} needs inputs "
+                f"{sorted(needed)}, got {sorted(req.frames)}")
+        if len({np.shape(f) for f in req.frames.values()}) != 1:
+            raise ValueError(f"request {req.rid}: input frames must share "
+                             f"one (H, W) shape")
+        q = self._queues.get(req.pipeline)
+        if q is None:
+            q = self._queues[req.pipeline] = BoundedFifo(self.max_pending)
+        req.submitted_at = time.perf_counter()
+        ok = q.push(req)
+        if ok:
+            self.metrics.frames_submitted += 1
+        else:
+            self.metrics.frames_rejected += 1
+        return ok
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> list[CompletedFrame]:
+        """Assemble and execute one batch; [] when idle."""
+        name, reqs = assemble_batch(
+            self._queues, self.max_batch,
+            age_of=lambda r: r.submitted_at,
+            compatible=lambda a, b: a.shape == b.shape)
+        if not reqs:
+            return []
+        h, w = reqs[0].shape
+        th, tw = self.tile_shape
+        t0 = time.perf_counter()
+        if h > th or w > tw:
+            outs = [execute_tiled(self.cache, name, r.frames, th, tw,
+                                  batch=self.max_batch) for r in reqs]
+            vmem = self.cache.vmem_bytes()
+        else:
+            ex = self.cache.executor_for(name, h, w, batch=self.max_batch)
+            pad = self.max_batch - len(reqs)
+            inputs = {n: jnp.stack(
+                [jnp.asarray(r.frames[n], jnp.float32) for r in reqs]
+                + [jnp.zeros((h, w), jnp.float32)] * pad)
+                for n in self.cache.dag_for(name).input_stages()}
+            batch_out = ex(inputs)
+            batch_out.block_until_ready()
+            outs = [batch_out[i] for i in range(len(reqs))]
+            vmem = ex.vmem_bytes
+        dt = time.perf_counter() - t0
+        self.metrics.observe_batch(name, len(reqs), self.max_batch, dt, vmem)
+        done: list[CompletedFrame] = []
+        now = time.perf_counter()
+        for r, out in zip(reqs, outs):
+            lat = now - r.submitted_at
+            self.metrics.observe_latency(lat)
+            done.append(CompletedFrame(rid=r.rid, pipeline=name, output=out,
+                                       latency_s=lat))
+        return done
+
+    def run(self, requests: list[FrameRequest]) -> dict[int, jnp.ndarray]:
+        """Submit everything (respecting backpressure), drain to completion."""
+        pending = list(requests)
+        results: dict[int, jnp.ndarray] = {}
+        while pending or self.pending:
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            for c in self.step():
+                results[c.rid] = c.output
+        return results

@@ -1,0 +1,62 @@
+"""Serving metrics for the frame engine.
+
+Tracks the three quantities the ROADMAP's serving story is judged on:
+throughput (frames/sec, overall and steady-state), request latency
+(submit -> completion, streaming mean/max), and the VMEM footprint of the
+resident compiled executors (the accelerator's "SRAM bill"). Counters are
+plain python — the engine is the single-threaded control loop, exactly
+like the LM engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.serve.scheduling import RunningStat
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    started_at: float = dataclasses.field(default_factory=time.perf_counter)
+    frames_submitted: int = 0
+    frames_completed: int = 0
+    frames_rejected: int = 0          # backpressure refusals
+    batches: int = 0
+    batch_fill: RunningStat = dataclasses.field(default_factory=RunningStat)
+    latency_s: RunningStat = dataclasses.field(default_factory=RunningStat)
+    execute_s: float = 0.0            # time inside executor calls
+    vmem_high_water: int = 0
+    per_pipeline: dict = dataclasses.field(default_factory=dict)
+
+    def observe_batch(self, pipeline: str, n_frames: int, slots: int,
+                      execute_s: float, vmem_bytes: int) -> None:
+        self.batches += 1
+        self.frames_completed += n_frames
+        self.batch_fill.observe(n_frames / slots)
+        self.execute_s += execute_s
+        self.vmem_high_water = max(self.vmem_high_water, vmem_bytes)
+        self.per_pipeline[pipeline] = self.per_pipeline.get(pipeline, 0) \
+            + n_frames
+
+    def observe_latency(self, seconds: float) -> None:
+        self.latency_s.observe(seconds)
+
+    @property
+    def wall_s(self) -> float:
+        return time.perf_counter() - self.started_at
+
+    def snapshot(self) -> dict:
+        wall = self.wall_s
+        return {
+            "frames_submitted": self.frames_submitted,
+            "frames_completed": self.frames_completed,
+            "frames_rejected": self.frames_rejected,
+            "batches": self.batches,
+            "mean_batch_fill": self.batch_fill.mean,
+            "fps_wall": self.frames_completed / wall if wall > 0 else 0.0,
+            "fps_execute": (self.frames_completed / self.execute_s
+                            if self.execute_s > 0 else 0.0),
+            "latency": self.latency_s.snapshot(),
+            "vmem_high_water_bytes": self.vmem_high_water,
+            "per_pipeline": dict(self.per_pipeline),
+        }

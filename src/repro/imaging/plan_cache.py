@@ -1,0 +1,114 @@
+"""Plan cache: compile once per shape, serve forever (paper's core deal).
+
+An ImaGen accelerator is compiled for one line width and then streams
+frames indefinitely; re-running the ILP scheduler + allocator + Pallas
+trace per frame throws that amortization away. The cache has two levels,
+mirroring the two compilation costs:
+
+  * **plan level** — keyed by ``(pipeline name, width, mem-config combo)``
+    (``PipelinePlan.cache_key``): memoizes ``compile_pipeline`` — the ILP
+    solve, ring allocation, and simulator validation.
+  * **executor level** — keyed by plan key + (height, batch): memoizes the
+    traced + jitted Pallas callable. Height/batch are execution-shape
+    parameters the plan itself is independent of (rings size by width
+    only), so one plan fans out to many executors.
+
+Both levels report hit/miss/compile-time stats for the serving metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping
+
+from repro.core import algorithms
+from repro.core.codegen import PipelinePlan, compile_pipeline, mem_cfg_key
+from repro.core.dag import PipelineDAG
+from repro.core.linebuffer import DP, MemConfig
+from repro.kernels.stencil_pipeline import StencilExecutor, make_executor
+
+
+@dataclasses.dataclass
+class CacheStats:
+    plan_hits: int = 0
+    plan_misses: int = 0
+    exec_hits: int = 0
+    exec_misses: int = 0
+    plan_compile_s: float = 0.0
+    exec_compile_s: float = 0.0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PlanCache:
+    """Long-lived compiled-artifact store for the frame-serving layer.
+
+    ``pipelines`` maps name -> DAG factory (defaults to the paper's
+    Table-3 set). The DAG is built once per name and shared by every plan
+    and executor under that name — stage closures must be identical
+    objects for the jit caches downstream to cohere.
+    """
+
+    def __init__(self,
+                 pipelines: Mapping[str, Callable[[], PipelineDAG]] | None = None,
+                 mem: MemConfig | Mapping[str, MemConfig] = DP,
+                 interpret: bool = True):
+        self._factories = dict(pipelines if pipelines is not None
+                               else algorithms.ALGORITHMS)
+        self._dags: dict[str, PipelineDAG] = {}
+        self._plans: dict[tuple, PipelinePlan] = {}
+        self._execs: dict[tuple, StencilExecutor] = {}
+        self.default_mem = mem
+        self.interpret = interpret
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------- lookups
+    def dag_for(self, name: str) -> PipelineDAG:
+        if name not in self._dags:
+            if name not in self._factories:
+                raise KeyError(f"unknown pipeline {name!r}; have "
+                               f"{sorted(self._factories)}")
+            self._dags[name] = self._factories[name]()
+        return self._dags[name]
+
+    def plan_for(self, name: str, w: int,
+                 mem: MemConfig | Mapping[str, MemConfig] | None = None
+                 ) -> PipelinePlan:
+        mem = self.default_mem if mem is None else mem
+        key = (name, w, mem_cfg_key(mem))
+        if key in self._plans:
+            self.stats.plan_hits += 1
+            return self._plans[key]
+        self.stats.plan_misses += 1
+        t0 = time.perf_counter()
+        plan = compile_pipeline(self.dag_for(name), w, mem=mem)
+        self.stats.plan_compile_s += time.perf_counter() - t0
+        self._plans[key] = plan
+        return plan
+
+    def executor_for(self, name: str, h: int, w: int,
+                     batch: int | None = None,
+                     mem: MemConfig | Mapping[str, MemConfig] | None = None
+                     ) -> StencilExecutor:
+        mem = self.default_mem if mem is None else mem
+        key = (name, w, mem_cfg_key(mem), h, batch, self.interpret)
+        if key in self._execs:
+            self.stats.exec_hits += 1
+            return self._execs[key]
+        plan = self.plan_for(name, w, mem=mem)
+        self.stats.exec_misses += 1
+        t0 = time.perf_counter()
+        ex = make_executor(self.dag_for(name), h, w, batch=batch, plan=plan,
+                           interpret=self.interpret)
+        self.stats.exec_compile_s += time.perf_counter() - t0
+        self._execs[key] = ex
+        return ex
+
+    # ----------------------------------------------------------- accounting
+    def vmem_bytes(self) -> int:
+        """High-water VMEM across all resident executors (rings only)."""
+        return max((e.vmem_bytes for e in self._execs.values()), default=0)
+
+    def __len__(self) -> int:
+        return len(self._plans)

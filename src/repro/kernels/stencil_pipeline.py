@@ -28,6 +28,7 @@ program. Stencil window math is plain VPU work (shift + multiply-add).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 
@@ -89,13 +90,16 @@ def _stage_read(ring_ref, ring_rows: int, row: jnp.ndarray, sh: int, sw: int,
     return jnp.stack(rows, axis=0)  # (sh, W) top..bottom
 
 
-def make_pipeline_kernel(dag: PipelineDAG, h: int, w: int,
-                         plan: PipelinePlan | None = None,
-                         interpret: bool = True):
-    """Build a jit-compiled fused executor for ``dag`` on (h, w) images.
+def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
+                         plan: PipelinePlan | None, interpret: bool,
+                         batch: int | None):
+    """Shared kernel builder for the single-frame and batched executors.
 
-    Returns (fn, vmem_bytes): fn maps {input_name: (h, w) float32} to the
-    (h, w) float32 output of the pipeline's output stage.
+    The two variants differ only in rank: ``batch=None`` runs grid=(h,)
+    over (h, w_pad) arrays; an integer batch runs grid=(batch, h) over
+    (batch, h, w_pad). The topological stage loop — ring reads with
+    top-of-frame masking, window assembly with same-producer key dedup,
+    ring writes — is identical and lives here exactly once.
     """
     rings = _plan_rings(dag, plan)
     w_pad = _round_up(w, 128)
@@ -107,20 +111,23 @@ def make_pipeline_kernel(dag: PipelineDAG, h: int, w: int,
     # the stage the output stage reads (it streams 1x1 from it)
     final = dag.in_edges(out_stage)[0].producer
 
+    batched = batch is not None
+    row_axis = 1 if batched else 0      # program_id axis walking rows
+    lead = (0, 0) if batched else (0,)  # block-local index of the row
+
     def kernel(*refs):
         in_refs = {name: refs[i] for i, name in enumerate(inputs)}
         out_ref = refs[len(inputs)]
         ring_refs = {p: refs[len(inputs) + 1 + i]
                      for i, p in enumerate(ring_owners)}
-        row = pl.program_id(0)
+        row = pl.program_id(row_axis)
 
-        produced: dict[str, jnp.ndarray] = {}
         for name in dag.topo_order:
             st = dag.stages[name]
             if st.is_output:
                 continue
             if st.is_input:
-                val = in_refs[name][0, :w]
+                val = in_refs[name][lead + (slice(0, w),)]
             elif st.fn is None:  # relay
                 e = dag.in_edges(name)[0]
                 rr = ring_shapes[e.producer][0]
@@ -137,17 +144,23 @@ def make_pipeline_kernel(dag: PipelineDAG, h: int, w: int,
                     seen.add(e.producer)
                     wins[key] = _row_window(rows_, e.sw)
                 val = st.fn(wins)  # (W,)
-            produced[name] = val
             if name in ring_refs:
                 rr = ring_shapes[name][0]
                 slot = jax.lax.rem(row, rr)
-                pl.store(ring_refs[name], (pl.dslice(slot, 1), pl.dslice(0, w)),
+                pl.store(ring_refs[name],
+                         (pl.dslice(slot, 1), pl.dslice(0, w)),
                          val[None, :])
             if name == final:
-                out_ref[0, :w] = val
+                out_ref[lead + (slice(0, w),)] = val
 
-    in_specs = [pl.BlockSpec((1, w_pad), lambda r: (r, 0)) for _ in inputs]
-    out_specs = pl.BlockSpec((1, w_pad), lambda r: (r, 0))
+    if batched:
+        blk, index_map = (1, 1, w_pad), (lambda b, r: (b, r, 0))
+        grid, out_dims = (batch, h), (batch, h, w_pad)
+    else:
+        blk, index_map = (1, w_pad), (lambda r: (r, 0))
+        grid, out_dims = (h,), (h, w_pad)
+    in_specs = [pl.BlockSpec(blk, index_map) for _ in inputs]
+    out_specs = pl.BlockSpec(blk, index_map)
     if _HAVE_PLTPU:
         scratch = [pltpu.VMEM(ring_shapes[p], jnp.float32)
                    for p in ring_owners]
@@ -157,10 +170,10 @@ def make_pipeline_kernel(dag: PipelineDAG, h: int, w: int,
 
     call = pl.pallas_call(
         kernel,
-        grid=(h,),
+        grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
-        out_shape=jax.ShapeDtypeStruct((h, w_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct(out_dims, jnp.float32),
         scratch_shapes=scratch,
         interpret=interpret,
     )
@@ -168,8 +181,71 @@ def make_pipeline_kernel(dag: PipelineDAG, h: int, w: int,
     @jax.jit
     def fn(images: dict[str, jnp.ndarray]) -> jnp.ndarray:
         padded = [jnp.pad(jnp.asarray(images[n], jnp.float32),
-                          ((0, 0), (0, w_pad - w))) for n in inputs]
+                          [(0, 0)] * (len(out_dims) - 1)
+                          + [(0, w_pad - w)]) for n in inputs]
         out = call(*padded)
-        return out[:, :w]
+        return out[..., :w]
 
     return fn, vmem_bytes
+
+
+def make_pipeline_kernel(dag: PipelineDAG, h: int, w: int,
+                         plan: PipelinePlan | None = None,
+                         interpret: bool = True):
+    """Build a jit-compiled fused executor for ``dag`` on (h, w) images.
+
+    Returns (fn, vmem_bytes): fn maps {input_name: (h, w) float32} to the
+    (h, w) float32 output of the pipeline's output stage.
+    """
+    return _build_pipeline_call(dag, h, w, plan, interpret, batch=None)
+
+
+def make_batched_pipeline_kernel(dag: PipelineDAG, batch: int, h: int, w: int,
+                                 plan: PipelinePlan | None = None,
+                                 interpret: bool = True):
+    """Batched variant: one fused Pallas program over a frame batch.
+
+    The grid is (batch, h); frames execute back-to-back through the SAME
+    VMEM ring buffers — no per-frame re-allocation, no extra VMEM. This is
+    sound because every ring read is top-of-frame masked (rows above row 0
+    of the *current* frame read as zero), so frame b never observes frame
+    b-1's residue: any unmasked slot was rewritten earlier in frame b.
+
+    Returns (fn, vmem_bytes): fn maps {input: (B, h, w)} -> (B, h, w).
+    """
+    return _build_pipeline_call(dag, h, w, plan, interpret, batch=batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilExecutor:
+    """A compiled, reusable frame executor — the serving-side artifact.
+
+    ``batch=None`` wraps the single-frame kernel ((h, w) -> (h, w));
+    an integer batch wraps the batched kernel ((B, h, w) -> (B, h, w)).
+    The callable is jitted once at construction; every subsequent call is
+    the steady-state cost only.
+    """
+    dag: PipelineDAG
+    h: int
+    w: int
+    batch: int | None
+    vmem_bytes: int
+    interpret: bool
+    _fn: "callable" = dataclasses.field(repr=False)
+
+    def __call__(self, images: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        return self._fn(images)
+
+    @property
+    def frame_shape(self) -> tuple[int, int]:
+        return (self.h, self.w)
+
+
+def make_executor(dag: PipelineDAG, h: int, w: int,
+                  batch: int | None = None,
+                  plan: PipelinePlan | None = None,
+                  interpret: bool = True) -> StencilExecutor:
+    """Executor factory: DAG + shape (+ optional plan) -> StencilExecutor."""
+    fn, vmem = _build_pipeline_call(dag, h, w, plan, interpret, batch)
+    return StencilExecutor(dag=dag, h=h, w=w, batch=batch, vmem_bytes=vmem,
+                           interpret=interpret, _fn=fn)

@@ -1,0 +1,94 @@
+"""Scheduling primitives for slot-based continuous batching.
+
+Bounded admission in front, FIFO per stream, oldest-work-first batch
+assembly behind. The frame engine (imaging/engine.py) is built on these;
+the LM engine (serve/engine.py) predates them and implements the same
+shape inline — migrating it here is an open refactor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Hashable, Iterable, Mapping
+
+
+class BoundedFifo:
+    """FIFO with a hard capacity — ``push`` refuses instead of growing.
+
+    Refusal is the backpressure signal: the caller (client or load
+    generator) must retry after draining, which is exactly the behavior a
+    streaming accelerator's full input queue presents to its producer.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._q: deque = deque()
+
+    def push(self, item: Any) -> bool:
+        if len(self._q) >= self.capacity:
+            return False
+        self._q.append(item)
+        return True
+
+    def pop(self) -> Any:
+        return self._q.popleft()
+
+    def peek(self) -> Any:
+        return self._q[0]
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+def assemble_batch(queues: Mapping[Hashable, BoundedFifo], max_batch: int,
+                   age_of: Callable[[Any], float],
+                   compatible: Callable[[Any, Any], bool] | None = None,
+                   ) -> tuple[Hashable, list]:
+    """Oldest-head-first batch assembly across per-stream FIFOs.
+
+    Picks the stream whose head item is oldest (per ``age_of``, lower =
+    older), then pops up to ``max_batch`` items from that stream in FIFO
+    order, stopping early when ``compatible(first, item)`` says an item
+    cannot share the batch (e.g. mismatched frame shapes must not be
+    padded together). Returns (stream_key, items); (None, []) when idle.
+    """
+    live = [(k, q) for k, q in queues.items() if q]
+    if not live:
+        return None, []
+    key, q = min(live, key=lambda kq: age_of(kq[1].peek()))
+    first = q.peek()
+    items = [q.pop()]
+    while q and len(items) < max_batch:
+        if compatible is not None and not compatible(first, q.peek()):
+            break
+        items.append(q.pop())
+    return key, items
+
+
+@dataclasses.dataclass
+class RunningStat:
+    """Streaming mean/max/min (Welford-lite, no variance needed here)."""
+    count: int = 0
+    total: float = 0.0
+    max: float = 0.0
+    min: float = float("inf")
+
+    def observe(self, x: float) -> None:
+        self.count += 1
+        self.total += x
+        self.max = max(self.max, x)
+        self.min = min(self.min, x)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def snapshot(self) -> dict:
+        return {"count": self.count, "mean": self.mean,
+                "max": self.max if self.count else 0.0,
+                "min": self.min if self.count else 0.0}

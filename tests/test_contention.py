@@ -1,7 +1,10 @@
 """Contention model: access sets, arithmetization (fixed Eq. 12), oracle."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.contention import (Accessor, access_set, causality_delay,
                                    count_line_accesses, first_line,

@@ -16,6 +16,10 @@ import pytest
 
 from repro.distributed.pipeline import plan_1f1b
 
+# whole module is multi-device/subprocess-heavy: deselected in CI via
+# -m "not slow" (see .github/workflows/ci.yml)
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

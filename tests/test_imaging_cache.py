@@ -1,0 +1,92 @@
+"""Plan cache: hit/miss semantics, key identity, serialization hooks."""
+import numpy as np
+import pytest
+
+from repro.core import DP, SP, algorithms, compile_pipeline
+from repro.core.codegen import mem_cfg_key
+from repro.imaging import PlanCache
+from repro.kernels import ref
+
+RNG = np.random.RandomState(7)
+
+
+def test_plan_hit_miss_by_name_width_mem():
+    cache = PlanCache()
+    p1 = cache.plan_for("unsharp-m", 24)
+    assert (cache.stats.plan_misses, cache.stats.plan_hits) == (1, 0)
+    assert cache.plan_for("unsharp-m", 24) is p1
+    assert (cache.stats.plan_misses, cache.stats.plan_hits) == (1, 1)
+    # every leg of the key misses independently
+    cache.plan_for("unsharp-m", 32)           # width
+    cache.plan_for("canny-s", 24)             # pipeline
+    cache.plan_for("unsharp-m", 24, mem=SP)   # mem combo
+    assert (cache.stats.plan_misses, cache.stats.plan_hits) == (4, 1)
+    assert len(cache) == 4
+
+
+def test_executor_reuses_plan():
+    cache = PlanCache()
+    e1 = cache.executor_for("harris-s", 16, 24, batch=2)
+    assert (cache.stats.exec_misses, cache.stats.plan_misses) == (1, 1)
+    assert cache.executor_for("harris-s", 16, 24, batch=2) is e1
+    assert cache.stats.exec_hits == 1
+    # new height/batch: new executor, same plan (plan key has no h/batch)
+    cache.executor_for("harris-s", 20, 24, batch=2)
+    cache.executor_for("harris-s", 16, 24, batch=None)
+    assert cache.stats.exec_misses == 3
+    assert cache.stats.plan_misses == 1
+    assert cache.stats.plan_hits == 2
+
+
+def test_cached_executor_is_correct():
+    cache = PlanCache()
+    ex = cache.executor_for("canny-m", 20, 24, batch=3)
+    frames = RNG.rand(3, 20, 24).astype(np.float32)
+    got = np.asarray(ex({"in": frames}))
+    dag = cache.dag_for("canny-m")
+    for b in range(3):
+        exp = ref.stencil_pipeline_ref(dag, {"in": frames[b]})
+        np.testing.assert_allclose(got[b], np.asarray(exp),
+                                   rtol=1e-4, atol=1e-5)
+    assert ex.vmem_bytes > 0
+    assert cache.vmem_bytes() >= ex.vmem_bytes
+
+
+def test_mem_cfg_key_stable_and_distinct():
+    assert mem_cfg_key(DP) == mem_cfg_key(DP)
+    assert mem_cfg_key(DP) != mem_cfg_key(SP)
+    m1 = {"a": DP, "b": SP}
+    m2 = {"b": SP, "a": DP}                   # insertion order irrelevant
+    assert mem_cfg_key(m1) == mem_cfg_key(m2)
+    # an all-equal mapping collapses to the uniform key, so a compiled
+    # plan's expanded mem_cfg keys the same as the spec it came from
+    assert mem_cfg_key({"a": DP, "b": DP}) == mem_cfg_key(DP)
+
+
+def test_plan_cache_key_matches_cache_identity():
+    cache = PlanCache()
+    plan = cache.plan_for("unsharp-m", 24)
+    assert plan.cache_key == ("unsharp-m", 24, mem_cfg_key(DP))
+    # the equivalent explicit per-stage spec hits the same cache slot
+    full = {s: DP for s in cache.dag_for("unsharp-m").stages}
+    assert cache.plan_for("unsharp-m", 24, mem=full) is plan
+    assert cache.stats.plan_misses == 1
+
+
+def test_plan_fingerprint_and_dict():
+    dag = algorithms.ALGORITHMS["unsharp-m"]()
+    p1 = compile_pipeline(dag, 24, mem=DP)
+    p2 = compile_pipeline(algorithms.ALGORITHMS["unsharp-m"](), 24, mem=DP)
+    assert p1.fingerprint() == p2.fingerprint()       # deterministic compile
+    p3 = compile_pipeline(dag, 32, mem=DP)
+    assert p1.fingerprint() != p3.fingerprint()
+    d = p1.to_dict()
+    assert d["pipeline"] == "unsharp-m" and d["w"] == 24
+    assert set(d["schedule"]) == set(dag.stages)
+    import json
+    json.dumps(d)                                     # JSON-serializable
+
+
+def test_unknown_pipeline_raises():
+    with pytest.raises(KeyError):
+        PlanCache().plan_for("no-such-pipeline", 24)

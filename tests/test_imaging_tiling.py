@@ -1,0 +1,75 @@
+"""Tiled executor: halo math, coverage, exactness vs the jnp reference."""
+import numpy as np
+import pytest
+
+from repro.core import algorithms
+from repro.imaging import PlanCache, execute_tiled, plan_tile_grid, tile_origins
+from repro.kernels import ref
+
+RNG = np.random.RandomState(11)
+
+
+def test_tile_origins_cover_without_gaps():
+    for total, tile, halo in [(100, 58, 10), (64, 32, 4), (33, 32, 4),
+                              (32, 32, 4), (200, 48, 17), (31, 48, 4)]:
+        org = tile_origins(total, tile, halo)
+        assert org[0] == 0
+        if total <= tile:
+            assert org == [0]
+            continue
+        assert org[-1] + tile == total          # last tile flush with edge
+        covered = tile                           # first tile: all rows valid
+        for a in org[1:]:
+            assert a + halo <= covered           # no gap before valid region
+            covered = a + tile
+        assert covered == total
+
+
+def test_tile_origins_rejects_degenerate_tile():
+    with pytest.raises(ValueError):
+        tile_origins(100, 10, 10)               # tile must exceed halo
+
+
+def test_cumulative_extent_matches_hand_count():
+    # canny-m: 1x5 -> 5x1 -> 3x1 -> 1x1 -> 3x3 -> 3x3 -> 1x1 chain
+    assert algorithms.ALGORITHMS["canny-m"]().cumulative_extent() == (10, 10)
+    # unsharp: 1x5 then 5x1 then 1x1 joins
+    assert algorithms.ALGORITHMS["unsharp-m"]().cumulative_extent() == (4, 4)
+    # xcorr: single 18x1 window
+    assert algorithms.ALGORITHMS["xcorr-m"]().cumulative_extent() == (17, 0)
+
+
+@pytest.mark.parametrize("name,hw", [
+    ("canny-m", (50, 100)),     # wider and taller, non-divisible
+    ("canny-m", (40, 70)),      # width not a multiple of the stride
+    ("unsharp-m", (37, 101)),   # odd sizes
+    ("unsharp-m", (30, 48)),    # exactly the compiled width, taller only
+])
+def test_tiled_matches_reference(name, hw):
+    h, w = hw
+    cache = PlanCache()
+    img = RNG.rand(h, w).astype(np.float32)
+    got = execute_tiled(cache, name, {"in": img}, tile_h=40, tile_w=48,
+                        batch=4)
+    exp = ref.stencil_pipeline_ref(cache.dag_for(name), {"in": img})
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-5)
+
+
+def test_tiled_single_tile_degenerates_to_plain_execution():
+    cache = PlanCache()
+    img = RNG.rand(20, 24).astype(np.float32)
+    grid = plan_tile_grid(cache.dag_for("harris-s"), 20, 24, 40, 48)
+    assert grid.n_tiles == 1 and grid.tile_h == 20 and grid.tile_w == 24
+    got = execute_tiled(cache, "harris-s", {"in": img}, 40, 48)
+    exp = ref.stencil_pipeline_ref(cache.dag_for("harris-s"), {"in": img})
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-5)
+
+
+def test_tiled_executor_compiles_once_per_tile_shape():
+    cache = PlanCache()
+    for _ in range(3):                      # 3 frames, same tile shape
+        img = RNG.rand(50, 100).astype(np.float32)
+        execute_tiled(cache, "unsharp-m", {"in": img}, 40, 48, batch=4)
+    assert cache.stats.plan_misses == 1
+    assert cache.stats.exec_misses == 1
+    assert cache.stats.exec_hits >= 2
