@@ -1,22 +1,29 @@
-"""Frame-serving throughput: cached plans vs compile-every-frame.
+"""Frame-serving throughput: row-group sweep + cached-vs-recompile.
 
     PYTHONPATH=src python benchmarks/serve_frames.py
     PYTHONPATH=src python benchmarks/serve_frames.py \
         --pipelines canny-s canny-m harris-m unsharp-m \
-        --widths 48 96 --batches 1 4 --frames 12 --out results/serve.json
+        --widths 48 96 --batches 1 4 --rows 1 4 8 --frames 12
+    PYTHONPATH=src python benchmarks/serve_frames.py --smoke   # CI gate
 
-For every (pipeline, width, batch) cell this measures
+Two measurements, both written to a machine-readable ``BENCH_serve.json``
+so the perf trajectory is tracked across PRs instead of only printed:
 
-  * ``baseline_fps`` — the no-serving-layer cost: each frame re-runs
-    ``compile_pipeline`` (ILP + allocation + simulator validation) and
-    re-traces/jits the Pallas kernel before executing, which is what the
-    seed repo did implicitly.
-  * ``cached_fps`` — steady-state through the PlanCache: compile once,
-    then stream frames through the resident batched executor.
+  * **row-group sweep** (default) — for every (pipeline, width, batch)
+    cell and every ``rows_per_step`` R: steady-state frames/sec through
+    the resident executor, its VMEM ring footprint, executor compile time
+    (trace + jit + first call), and whether the output is bitwise equal
+    to the R=1 reference on a fixed probe frame. R is the row-group
+    blocking factor of the fused Pallas executor: R=1 pays one grid step
+    per image row; R=8 moves whole (8, 128)-tile slabs per step.
+  * **cached vs compile-every-frame** (``--with-baseline``) — the
+    original serving-layer amortization argument: each baseline frame
+    re-runs compile_pipeline (ILP + allocation + simulator) and re-traces
+    the kernel, which is what the seed repo did implicitly.
 
-The ratio is the amortization the paper's "compile once, stream frames"
-accelerator model banks on. Interpret-mode Pallas on CPU keeps absolute
-numbers modest; the *ratio* is the result.
+``--smoke`` is the CI perf gate: one small pipeline, R in {1, 8}, exit
+nonzero if the R=8 path fails to beat R=1 — catching accidental
+de-vectorization of the row-group hot path.
 """
 from __future__ import annotations
 
@@ -34,33 +41,119 @@ from repro.core import DP, algorithms, compile_pipeline  # noqa: E402
 from repro.imaging import PlanCache  # noqa: E402
 from repro.kernels.stencil_pipeline import make_executor  # noqa: E402
 
-DEFAULT_PIPELINES = ["canny-s", "canny-m", "harris-m", "unsharp-m"]
+DEFAULT_PIPELINES = ["canny-s", "canny-m", "harris-s", "harris-m",
+                     "unsharp-m", "xcorr-m", "denoise-m"]
+SCHEMA = "bench_serve/v2"
 
 
-def bench_cell(name: str, h: int, w: int, batch: int, frames: int,
-               baseline_frames: int, rng: np.random.RandomState) -> dict:
+def _max_ulp(a: np.ndarray, b: np.ndarray) -> float:
+    """Approximate max ULP distance (0.0 when bitwise equal)."""
+    if (a == b).all():
+        return 0.0
+    scale = np.spacing(np.maximum(np.abs(a), np.abs(b)).astype(np.float32))
+    return float(np.max(np.abs(a - b) / scale))
+
+
+def bench_rowgroup_cell(cache: PlanCache, name: str, h: int, w: int,
+                        batch: int, rows_list: list[int], frames: int,
+                        rng: np.random.RandomState) -> list[dict]:
+    """One (pipeline, width, batch) cell swept over rows_per_step."""
+    probe = {"in": rng.rand(batch, h, w).astype(np.float32)}
+    stream = [{"in": rng.rand(batch, h, w).astype(np.float32)}
+              for _ in range(frames)]
+    cells, ref_out, r1_fps = [], None, None
+    for r in rows_list:
+        t0 = time.perf_counter()
+        ex = cache.executor_for(name, h, w, batch=batch, rows_per_step=r)
+        out = np.asarray(ex(probe))                 # warm: trace + jit
+        compile_ms = (time.perf_counter() - t0) * 1e3
+        if ref_out is None:
+            ref_out = out
+        for fr in stream[:3]:                       # settle caches/allocator
+            ex(fr).block_until_ready()
+        t0 = time.perf_counter()
+        for fr in stream:
+            ex(fr).block_until_ready()
+        fps = batch * frames / (time.perf_counter() - t0)
+        if r1_fps is None:
+            r1_fps = fps
+        cells.append({
+            "pipeline": name, "h": h, "w": w, "batch": batch,
+            "rows_per_step": r, "fps": fps,
+            "speedup_vs_r1": fps / r1_fps,
+            "vmem_bytes": ex.vmem_bytes,
+            "compile_ms": compile_ms,
+            "bitwise_equal_r1": bool((out == ref_out).all()),
+            "max_ulp_vs_r1": _max_ulp(out, ref_out),
+        })
+    return cells
+
+
+def run_rowgroup(args, rng) -> dict:
+    cache = PlanCache()
+    rows_list = sorted(set([1] + list(args.rows)))  # R=1 is the reference
+    cells = []
+    print(f"{'pipeline':>10} {'h':>4} {'w':>5} {'B':>3} {'R':>3} "
+          f"{'f/s':>9} {'vs R=1':>7} {'VMEM B':>8} {'compile ms':>11} "
+          f"{'bitwise':>8}")
+    for name in args.pipelines:
+        for w in args.widths:
+            for b in args.batches:
+                for c in bench_rowgroup_cell(cache, name, args.height, w, b,
+                                             rows_list, args.frames, rng):
+                    cells.append(c)
+                    print(f"{c['pipeline']:>10} {c['h']:>4} {c['w']:>5} "
+                          f"{c['batch']:>3} {c['rows_per_step']:>3} "
+                          f"{c['fps']:>9.2f} {c['speedup_vs_r1']:>6.2f}x "
+                          f"{c['vmem_bytes']:>8} {c['compile_ms']:>11.0f} "
+                          f"{str(c['bitwise_equal_r1']):>8}")
+    # per-pipeline speedup at the largest swept R (geomean over cells)
+    r_top = rows_list[-1]
+    summary = {}
+    for name in args.pipelines:
+        sp = [c["speedup_vs_r1"] for c in cells
+              if c["pipeline"] == name and c["rows_per_step"] == r_top]
+        bw = [c["bitwise_equal_r1"] for c in cells
+              if c["pipeline"] == name and c["rows_per_step"] == r_top]
+        summary[name] = {
+            f"geomean_speedup_r{r_top}": float(np.exp(np.mean(np.log(sp)))),
+            f"worst_speedup_r{r_top}": min(sp),
+            "all_bitwise_equal_r1": all(bw),
+        }
+    n2x = sum(1 for s in summary.values()
+              if s[f"worst_speedup_r{r_top}"] >= 2.0)
+    print(f"\nrow-group R={r_top}: "
+          + ", ".join(f"{n} {s[f'geomean_speedup_r{r_top}']:.1f}x"
+                      f"{'' if s['all_bitwise_equal_r1'] else ' (~)'}"
+                      for n, s in summary.items())
+          + f"; {n2x}/{len(summary)} pipelines >= 2x on every cell")
+    return {"rows_swept": rows_list, "cells": cells,
+            "per_pipeline": summary,
+            "pipelines_at_2x": n2x}
+
+
+def bench_cached_cell(name: str, h: int, w: int, batch: int, frames: int,
+                      baseline_frames: int,
+                      rng: np.random.RandomState) -> dict:
+    """Cached steady-state vs recompile-every-frame (the PR-1 result)."""
     dag_factory = algorithms.ALGORITHMS[name]
     mk = lambda: {"in": rng.rand(batch, h, w).astype(np.float32)}  # noqa: E731
 
-    # -- baseline: recompile per frame-batch (plan + kernel), then execute
     t0 = time.perf_counter()
     for _ in range(baseline_frames):
         dag = dag_factory()
         plan = compile_pipeline(dag, w, mem=DP)
         ex = make_executor(dag, h, w, batch=batch, plan=plan)
         ex(mk()).block_until_ready()
-    baseline_s = (time.perf_counter() - t0) / baseline_frames
-    baseline_fps = batch / baseline_s
+    baseline_fps = batch * baseline_frames / (time.perf_counter() - t0)
 
-    # -- cached: one plan + executor, stream frames through it
     cache = PlanCache()
     ex = cache.executor_for(name, h, w, batch=batch)
     ex(mk()).block_until_ready()            # warm: trace + jit happens here
     t0 = time.perf_counter()
     for _ in range(frames):
         ex(mk()).block_until_ready()
-    cached_s = (time.perf_counter() - t0) / frames
-    cached_fps = batch / cached_s
+    cached_fps = batch * frames / (time.perf_counter() - t0)
 
     return {"pipeline": name, "h": h, "w": w, "batch": batch,
             "baseline_fps": baseline_fps, "cached_fps": cached_fps,
@@ -69,43 +162,78 @@ def bench_cell(name: str, h: int, w: int, batch: int, frames: int,
             "plan_compile_s": cache.stats.plan_compile_s}
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--pipelines", nargs="+", default=DEFAULT_PIPELINES,
-                    choices=sorted(algorithms.ALGORITHMS))
-    ap.add_argument("--widths", nargs="+", type=int, default=[48, 96])
-    ap.add_argument("--batches", nargs="+", type=int, default=[1, 4])
-    ap.add_argument("--height", type=int, default=32)
-    ap.add_argument("--frames", type=int, default=8,
-                    help="steady-state frame-batches per cell")
-    ap.add_argument("--baseline-frames", type=int, default=2,
-                    help="compile-every-frame iterations per cell")
-    ap.add_argument("--out", default=None)
-    args = ap.parse_args(argv)
-
-    rng = np.random.RandomState(0)
+def run_cached(args, rng) -> dict:
     rows = []
-    print(f"{'pipeline':>10} {'h':>4} {'w':>5} {'B':>3} "
+    print(f"\n{'pipeline':>10} {'h':>4} {'w':>5} {'B':>3} "
           f"{'baseline f/s':>13} {'cached f/s':>11} {'speedup':>8}")
     for name in args.pipelines:
         for w in args.widths:
             for b in args.batches:
-                r = bench_cell(name, args.height, w, b, args.frames,
-                               args.baseline_frames, rng)
+                r = bench_cached_cell(name, args.height, w, b, args.frames,
+                                      args.baseline_frames, rng)
                 rows.append(r)
                 print(f"{r['pipeline']:>10} {r['h']:>4} {r['w']:>5} "
                       f"{r['batch']:>3} {r['baseline_fps']:>13.2f} "
                       f"{r['cached_fps']:>11.2f} {r['speedup']:>7.1f}x")
     worst = min(r["speedup"] for r in rows)
     gmean = float(np.exp(np.mean([np.log(r["speedup"]) for r in rows])))
-    print(f"\nspeedup: worst {worst:.1f}x, geomean {gmean:.1f}x "
+    print(f"cached-vs-recompile: worst {worst:.1f}x, geomean {gmean:.1f}x "
           f"over {len(rows)} cells")
+    return {"cells": rows, "worst_speedup": worst, "geomean_speedup": gmean}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pipelines", nargs="+", default=DEFAULT_PIPELINES,
+                    choices=sorted(algorithms.ALGORITHMS))
+    ap.add_argument("--widths", nargs="+", type=int, default=[48, 96])
+    ap.add_argument("--batches", nargs="+", type=int, default=[1, 4])
+    ap.add_argument("--height", type=int, default=64)
+    ap.add_argument("--rows", nargs="+", type=int, default=[1, 4, 8],
+                    help="rows_per_step values to sweep (1 always added)")
+    ap.add_argument("--frames", type=int, default=40,
+                    help="steady-state frame-batches per cell")
+    ap.add_argument("--with-baseline", action="store_true",
+                    help="also run the recompile-every-frame comparison")
+    ap.add_argument("--baseline-frames", type=int, default=2,
+                    help="compile-every-frame iterations per cell")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: tiny sweep, fail if R=8 is slower "
+                         "than R=1")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.pipelines = ["unsharp-m"]
+        args.widths, args.batches, args.height = [48], [1], 64
+        args.rows, args.frames = [1, 8], 4
+        args.with_baseline = False
+
+    rng = np.random.RandomState(0)
+    report = {"schema": SCHEMA,
+              "config": {"pipelines": args.pipelines, "widths": args.widths,
+                         "batches": args.batches, "height": args.height,
+                         "frames": args.frames, "smoke": args.smoke}}
+    report["rowgroup"] = run_rowgroup(args, rng)
+    if args.with_baseline:
+        report["cached_vs_baseline"] = run_cached(args, rng)
+
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
-            json.dump({"cells": rows, "worst_speedup": worst,
-                       "geomean_speedup": gmean}, f, indent=1)
+            json.dump(report, f, indent=1)
         print(f"wrote {args.out}")
+
+    if args.smoke:
+        r_top = max(args.rows)
+        worst = min(c["speedup_vs_r1"]
+                    for c in report["rowgroup"]["cells"]
+                    if c["rows_per_step"] == r_top)
+        if worst < 1.0:
+            print(f"SMOKE FAIL: R={r_top} is {worst:.2f}x of R=1 "
+                  f"(de-vectorization regression)")
+            return 1
+        print(f"smoke ok: R={r_top} worst speedup {worst:.2f}x")
     return 0
 
 

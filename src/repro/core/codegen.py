@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import math
 from typing import Mapping
 
 from .dag import PipelineDAG
@@ -42,6 +43,44 @@ def mem_cfg_key(mem: MemConfig | Mapping[str, MemConfig]) -> tuple:
         (s, dataclasses.astuple(c)) for s, c in mem.items())))
 
 
+def row_group_rings(dag: PipelineDAG, alloc_buffers: Mapping | None,
+                    rows_per_step: int) -> dict[str, int]:
+    """Physical VMEM ring rows per buffer owner for row-group execution.
+
+    With ``rows_per_step`` (R) output rows per grid step, a consumer
+    reading an (sh, sw) window needs the producer's last ``R + sh - 1``
+    rows live simultaneously — one contiguous slab per step instead of sh
+    row reads. Rings therefore cover ``max(plan physical lines,
+    R + max_consumer_sh - 1)``, rounded up to a multiple of lcm(R, 8):
+    the R leg keeps every R-row ring *write* slab contiguous (write slots
+    are multiples of R, so stores never wrap), the 8 leg is the float32
+    (8, 128) VMEM sublane tile. At R=1 this reduces exactly to the old
+    per-row sizing padded to 8 sublanes.
+    """
+    if rows_per_step < 1:
+        raise ValueError(f"rows_per_step must be >= 1, got {rows_per_step}")
+    quantum = math.lcm(rows_per_step, 8)
+    rings: dict[str, int] = {}
+    for p in dag.topo_order:
+        shs = [e.sh for e in dag.out_edges(p)
+               if not dag.stages[e.consumer].is_output]
+        if not shs:
+            continue
+        need = rows_per_step + max(shs) - 1
+        if alloc_buffers and p in alloc_buffers:
+            need = max(need, alloc_buffers[p].n_lines_phys)
+        rings[p] = -(-need // quantum) * quantum
+    return rings
+
+
+def row_group_vmem_bytes(dag: PipelineDAG, alloc_buffers: Mapping | None,
+                         rows_per_step: int, w: int) -> int:
+    """float32 VMEM footprint of the row-group rings at line width ``w``."""
+    w_pad = -(-w // 128) * 128
+    rings = row_group_rings(dag, alloc_buffers, rows_per_step)
+    return sum(r * w_pad * 4 for r in rings.values())
+
+
 @dataclasses.dataclass
 class PipelinePlan:
     dag: PipelineDAG
@@ -49,6 +88,7 @@ class PipelinePlan:
     schedule: Schedule
     alloc: Allocation
     mem_cfg: dict[str, MemConfig]
+    rows_per_step: int = 1
 
     @property
     def total_alloc_bits(self) -> int:
@@ -68,8 +108,26 @@ class PipelinePlan:
 
     @property
     def cache_key(self) -> tuple:
-        """(pipeline name, width, mem combo) — the plan-cache identity."""
-        return (self.dag.name, self.w, mem_cfg_key(self.mem_cfg))
+        """(pipeline name, width, mem combo, row group) — the plan-cache
+        identity. ``rows_per_step`` is an execution-granularity choice the
+        schedule/allocation are independent of, so plans differing only in
+        it can be derived from each other without re-running the ILP (see
+        PlanCache.plan_for) — but they ARE distinct compiled artifacts:
+        ring physical sizing, VMEM accounting, and the generated executor
+        all change with R."""
+        return (self.dag.name, self.w, mem_cfg_key(self.mem_cfg),
+                self.rows_per_step)
+
+    def vmem_rings(self) -> dict[str, int]:
+        """Physical VMEM ring rows per buffer for the row-group executor."""
+        return row_group_rings(self.dag, self.alloc.buffers,
+                               self.rows_per_step)
+
+    @property
+    def vmem_ring_bytes(self) -> int:
+        """float32 VMEM the Pallas embodiment of this plan allocates."""
+        return row_group_vmem_bytes(self.dag, self.alloc.buffers,
+                                    self.rows_per_step, self.w)
 
     def to_dict(self) -> dict:
         """JSON-serializable structural summary of the compiled plan.
@@ -82,6 +140,9 @@ class PipelinePlan:
         return {
             "pipeline": self.dag.name,
             "w": self.w,
+            "rows_per_step": self.rows_per_step,
+            "vmem_rings": self.vmem_rings(),
+            "vmem_ring_bytes": self.vmem_ring_bytes,
             "schedule": dict(self.schedule.starts),
             "buffers": {
                 p: {"n_lines": b.n_lines, "n_lines_phys": b.n_lines_phys,
@@ -125,7 +186,8 @@ def compile_pipeline(dag: PipelineDAG, w: int,
                      mem: MemConfig | Mapping[str, MemConfig] = DP,
                      objective: str = "exact",
                      prune: bool = True,
-                     max_pad_iters: int = 8) -> PipelinePlan:
+                     max_pad_iters: int = 8,
+                     rows_per_step: int = 1) -> PipelinePlan:
     """Front door: DAG + memory spec -> scheduled, allocated plan.
 
     After scheduling, the allocation is validated by the cycle-accurate
@@ -165,4 +227,4 @@ def compile_pipeline(dag: PipelineDAG, w: int,
         raise ValueError(f"{dag.name}: ring padding did not converge: "
                          f"{rep.violations}")
     return PipelinePlan(dag=dag, w=w, schedule=sched, alloc=alloc,
-                        mem_cfg=cfg_of)
+                        mem_cfg=cfg_of, rows_per_step=rows_per_step)

@@ -12,10 +12,11 @@ The layer between the compiler (core/, kernels/) and the outside world:
 from .engine import CompletedFrame, FrameEngine, FrameRequest
 from .metrics import EngineMetrics
 from .plan_cache import CacheStats, PlanCache
-from .tiling import TileGrid, execute_tiled, plan_tile_grid, tile_origins
+from .tiling import (TileGrid, execute_tiled, plan_tile_grid,
+                     rows_per_step_for_tile, tile_origins)
 
 __all__ = [
     "CacheStats", "CompletedFrame", "EngineMetrics", "FrameEngine",
     "FrameRequest", "PlanCache", "TileGrid", "execute_tiled",
-    "plan_tile_grid", "tile_origins",
+    "plan_tile_grid", "rows_per_step_for_tile", "tile_origins",
 ]

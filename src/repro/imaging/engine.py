@@ -28,11 +28,11 @@ from typing import Mapping
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.scheduling import BoundedFifo, assemble_batch
+from repro.serve.scheduling import BoundedFifo, assemble_batch, pad_batch
 
 from .metrics import EngineMetrics
 from .plan_cache import PlanCache
-from .tiling import execute_tiled
+from .tiling import execute_tiled, rows_per_step_for_tile
 
 
 @dataclasses.dataclass
@@ -58,11 +58,15 @@ class CompletedFrame:
 class FrameEngine:
     def __init__(self, cache: PlanCache | None = None,
                  max_batch: int = 4, max_pending: int = 64,
-                 tile_shape: tuple[int, int] = (128, 128)):
+                 tile_shape: tuple[int, int] = (128, 128),
+                 rows_per_step: int = 8):
         self.cache = cache if cache is not None else PlanCache()
         self.max_batch = max_batch
         self.max_pending = max_pending
         self.tile_shape = tile_shape
+        # row-group blocking factor for every executor this engine compiles;
+        # clamped per-batch so frames shorter than R still execute
+        self.rows_per_step = rows_per_step
         self._queues: dict[str, BoundedFifo] = {}
         self.metrics = EngineMetrics()
 
@@ -106,24 +110,33 @@ class FrameEngine:
             return []
         h, w = reqs[0].shape
         th, tw = self.tile_shape
+        tiled = h > th or w > tw
+        # the row-group factor that actually executes: clamped by the tile
+        # height on the tiled path, by the frame height otherwise
+        rps = rows_per_step_for_tile(min(th, h) if tiled else h,
+                                     self.rows_per_step)
         t0 = time.perf_counter()
-        if h > th or w > tw:
+        if tiled:
             outs = [execute_tiled(self.cache, name, r.frames, th, tw,
-                                  batch=self.max_batch) for r in reqs]
+                                  batch=self.max_batch, rows_per_step=rps)
+                    for r in reqs]
+            for o in outs:           # sync: dt must measure execution,
+                o.block_until_ready()  # not async dispatch
             vmem = self.cache.vmem_bytes()
         else:
-            ex = self.cache.executor_for(name, h, w, batch=self.max_batch)
-            pad = self.max_batch - len(reqs)
-            inputs = {n: jnp.stack(
-                [jnp.asarray(r.frames[n], jnp.float32) for r in reqs]
-                + [jnp.zeros((h, w), jnp.float32)] * pad)
+            ex = self.cache.executor_for(name, h, w, batch=self.max_batch,
+                                         rows_per_step=rps)
+            inputs = {n: jnp.stack(pad_batch(
+                [jnp.asarray(r.frames[n], jnp.float32) for r in reqs],
+                self.max_batch, lambda: jnp.zeros((h, w), jnp.float32)))
                 for n in self.cache.dag_for(name).input_stages()}
             batch_out = ex(inputs)
             batch_out.block_until_ready()
             outs = [batch_out[i] for i in range(len(reqs))]
             vmem = ex.vmem_bytes
         dt = time.perf_counter() - t0
-        self.metrics.observe_batch(name, len(reqs), self.max_batch, dt, vmem)
+        self.metrics.observe_batch(name, len(reqs), self.max_batch, dt, vmem,
+                                   rows_per_step=rps)
         done: list[CompletedFrame] = []
         now = time.perf_counter()
         for r, out in zip(reqs, outs):

@@ -27,9 +27,11 @@ class EngineMetrics:
     execute_s: float = 0.0            # time inside executor calls
     vmem_high_water: int = 0
     per_pipeline: dict = dataclasses.field(default_factory=dict)
+    rows_per_step_seen: list = dataclasses.field(default_factory=list)
 
     def observe_batch(self, pipeline: str, n_frames: int, slots: int,
-                      execute_s: float, vmem_bytes: int) -> None:
+                      execute_s: float, vmem_bytes: int,
+                      rows_per_step: int = 1) -> None:
         self.batches += 1
         self.frames_completed += n_frames
         self.batch_fill.observe(n_frames / slots)
@@ -37,6 +39,8 @@ class EngineMetrics:
         self.vmem_high_water = max(self.vmem_high_water, vmem_bytes)
         self.per_pipeline[pipeline] = self.per_pipeline.get(pipeline, 0) \
             + n_frames
+        self.rows_per_step_seen = sorted(
+            set(self.rows_per_step_seen) | {rows_per_step})
 
     def observe_latency(self, seconds: float) -> None:
         self.latency_s.observe(seconds)
@@ -59,4 +63,5 @@ class EngineMetrics:
             "latency": self.latency_s.snapshot(),
             "vmem_high_water_bytes": self.vmem_high_water,
             "per_pipeline": dict(self.per_pipeline),
+            "rows_per_step_seen": list(self.rows_per_step_seen),
         }

@@ -5,13 +5,18 @@ frames indefinitely; re-running the ILP scheduler + allocator + Pallas
 trace per frame throws that amortization away. The cache has two levels,
 mirroring the two compilation costs:
 
-  * **plan level** — keyed by ``(pipeline name, width, mem-config combo)``
-    (``PipelinePlan.cache_key``): memoizes ``compile_pipeline`` — the ILP
-    solve, ring allocation, and simulator validation.
+  * **plan level** — keyed by ``(pipeline name, width, mem-config combo,
+    rows_per_step)`` (``PipelinePlan.cache_key``): memoizes
+    ``compile_pipeline`` — the ILP solve, ring allocation, and simulator
+    validation. The schedule/allocation are independent of the row-group
+    factor, so a plan differing from a resident one only in
+    ``rows_per_step`` is *derived* (dataclasses.replace) instead of
+    re-solved — the ILP runs once per (name, width, mem) no matter how
+    many row-group variants are served.
   * **executor level** — keyed by plan key + (height, batch): memoizes the
     traced + jitted Pallas callable. Height/batch are execution-shape
     parameters the plan itself is independent of (rings size by width
-    only), so one plan fans out to many executors.
+    and row group only), so one plan fans out to many executors.
 
 Both levels report hit/miss/compile-time stats for the serving metrics.
 """
@@ -73,30 +78,40 @@ class PlanCache:
         return self._dags[name]
 
     def plan_for(self, name: str, w: int,
-                 mem: MemConfig | Mapping[str, MemConfig] | None = None
-                 ) -> PipelinePlan:
+                 mem: MemConfig | Mapping[str, MemConfig] | None = None,
+                 rows_per_step: int = 1) -> PipelinePlan:
         mem = self.default_mem if mem is None else mem
-        key = (name, w, mem_cfg_key(mem))
+        mkey = mem_cfg_key(mem)
+        key = (name, w, mkey, rows_per_step)
         if key in self._plans:
             self.stats.plan_hits += 1
             return self._plans[key]
         self.stats.plan_misses += 1
+        # the ILP/allocation do not depend on the row group: derive from a
+        # sibling plan (any resident rows_per_step) instead of re-solving
+        sibling = next((p for (n2, w2, m2, _r), p in self._plans.items()
+                        if (n2, w2, m2) == (name, w, mkey)), None)
         t0 = time.perf_counter()
-        plan = compile_pipeline(self.dag_for(name), w, mem=mem)
+        if sibling is not None:
+            plan = dataclasses.replace(sibling, rows_per_step=rows_per_step)
+        else:
+            plan = compile_pipeline(self.dag_for(name), w, mem=mem,
+                                    rows_per_step=rows_per_step)
         self.stats.plan_compile_s += time.perf_counter() - t0
         self._plans[key] = plan
         return plan
 
     def executor_for(self, name: str, h: int, w: int,
                      batch: int | None = None,
-                     mem: MemConfig | Mapping[str, MemConfig] | None = None
-                     ) -> StencilExecutor:
+                     mem: MemConfig | Mapping[str, MemConfig] | None = None,
+                     rows_per_step: int = 1) -> StencilExecutor:
         mem = self.default_mem if mem is None else mem
-        key = (name, w, mem_cfg_key(mem), h, batch, self.interpret)
+        key = (name, w, mem_cfg_key(mem), h, batch, rows_per_step,
+               self.interpret)
         if key in self._execs:
             self.stats.exec_hits += 1
             return self._execs[key]
-        plan = self.plan_for(name, w, mem=mem)
+        plan = self.plan_for(name, w, mem=mem, rows_per_step=rows_per_step)
         self.stats.exec_misses += 1
         t0 = time.perf_counter()
         ex = make_executor(self.dag_for(name), h, w, batch=batch, plan=plan,

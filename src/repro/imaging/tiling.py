@@ -26,8 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.dag import PipelineDAG
 
@@ -88,34 +88,52 @@ def plan_tile_grid(dag: PipelineDAG, h: int, w: int,
                     col_origins=tuple(tile_origins(w, tw, left)))
 
 
+def rows_per_step_for_tile(tile_h: int, preferred: int = 8) -> int:
+    """Row-group factor for a tile: the float32 VMEM sublane count (8)
+    capped by the tile height — a 5-row tile cannot block 8 rows."""
+    return max(1, min(preferred, tile_h))
+
+
 def execute_tiled(cache: PlanCache, name: str,
                   images: dict[str, jnp.ndarray],
                   tile_h: int, tile_w: int,
-                  batch: int = 8) -> jnp.ndarray:
+                  batch: int = 8,
+                  rows_per_step: int | None = None) -> jnp.ndarray:
     """Run pipeline ``name`` over a frame of any size via tiling.
 
     ``images`` holds full-resolution (H, W) inputs; tiles are assembled
-    into batches of ``batch`` and executed through the cache's batched
-    executor (compiled once per tile shape). Returns the (H, W) output.
+    into batches of up to ``batch`` and executed through the cache's
+    batched executor. Assembly (``jax.lax.dynamic_slice``), execution,
+    and stitching (``jax.lax.dynamic_update_slice``) all stay on device:
+    the only host transfer is whatever the caller does with the returned
+    (H, W) array — one per frame, not one per tile batch. A trailing
+    partial batch runs through a tail-sized executor (cached like any
+    other) instead of being padded with dead-weight zero tiles.
+
+    ``rows_per_step`` defaults from the tile shape
+    (:func:`rows_per_step_for_tile`). Returns the (H, W) output.
     """
     dag = cache.dag_for(name)
     first = next(iter(images.values()))
     h, w = first.shape
     grid = plan_tile_grid(dag, h, w, tile_h, tile_w)
     th, tw = grid.tile_h, grid.tile_w
+    if rows_per_step is None:
+        rows_per_step = rows_per_step_for_tile(th)
 
     frames = {n: jnp.asarray(img, jnp.float32) for n, img in images.items()}
     coords = [(a, b) for a in grid.row_origins for b in grid.col_origins]
-    ex = cache.executor_for(name, th, tw, batch=batch)
-    out = np.zeros((h, w), np.float32)
+    out = jnp.zeros((h, w), jnp.float32)
     for i in range(0, len(coords), batch):
         chunk = coords[i:i + batch]
-        tiles = {n: jnp.stack(
-            [f[a:a + th, b:b + tw] for (a, b) in chunk]
-            + [jnp.zeros((th, tw), jnp.float32)] * (batch - len(chunk)))
-            for n, f in frames.items()}
-        res = np.asarray(ex(tiles))
+        tiles = {n: jnp.stack([jax.lax.dynamic_slice(f, (a, b), (th, tw))
+                               for (a, b) in chunk])
+                 for n, f in frames.items()}
+        ex = cache.executor_for(name, th, tw, batch=len(chunk),
+                                rows_per_step=rows_per_step)
+        res = ex(tiles)
         for j, (a, b) in enumerate(chunk):
             r_lo, r_hi, c_lo, c_hi = grid.valid_region(a, b)
-            out[r_lo:r_hi, c_lo:c_hi] = res[j, r_lo - a:, c_lo - b:]
-    return jnp.asarray(out)
+            out = jax.lax.dynamic_update_slice(
+                out, res[j, r_lo - a:, c_lo - b:], (r_lo, c_lo))
+    return out

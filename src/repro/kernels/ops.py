@@ -12,7 +12,7 @@ from repro.core.codegen import PipelinePlan
 from repro.core.dag import PipelineDAG
 
 from .conv2d_stencil import conv2d
-from .stencil_pipeline import make_pipeline_kernel
+from .stencil_pipeline import _resolve_rows, make_pipeline_kernel
 from .swa_decode import swa_decode
 
 __all__ = ["conv2d", "swa_decode", "fused_pipeline", "make_pipeline_kernel"]
@@ -22,20 +22,31 @@ _PIPE_CACHE: dict = {}
 
 def fused_pipeline(dag: PipelineDAG, images: dict[str, jnp.ndarray],
                    plan: PipelinePlan | None = None,
-                   interpret: bool = True) -> jnp.ndarray:
-    """Run a whole pipeline DAG as one fused line-buffered kernel."""
+                   interpret: bool = True,
+                   rows_per_step: int | None = None) -> jnp.ndarray:
+    """Run a whole pipeline DAG as one fused line-buffered kernel.
+
+    ``rows_per_step`` is the row-group blocking factor (None defers to
+    the plan's field; 1 when no plan)."""
     h, w = next(iter(images.values())).shape
-    key = (dag.name, h, w, plan is not None, interpret)
+    # key on the RESOLVED row group: plans differing only in rows_per_step
+    # must not collide on a shared rows_per_step=None
+    key = (dag.name, h, w, plan is not None, interpret,
+           _resolve_rows(rows_per_step, plan))
     if key not in _PIPE_CACHE:
         _PIPE_CACHE[key] = make_pipeline_kernel(dag, h, w, plan=plan,
-                                                interpret=interpret)
+                                                interpret=interpret,
+                                                rows_per_step=rows_per_step)
     fn, _ = _PIPE_CACHE[key]
     return fn(images)
 
 
 def pipeline_vmem_bytes(dag: PipelineDAG, h: int, w: int,
-                        plan: PipelinePlan | None = None) -> int:
-    key = (dag.name, h, w, plan is not None, True)
+                        plan: PipelinePlan | None = None,
+                        rows_per_step: int | None = None) -> int:
+    key = (dag.name, h, w, plan is not None, True,
+           _resolve_rows(rows_per_step, plan))
     if key not in _PIPE_CACHE:
-        _PIPE_CACHE[key] = make_pipeline_kernel(dag, h, w, plan=plan)
+        _PIPE_CACHE[key] = make_pipeline_kernel(dag, h, w, plan=plan,
+                                                rows_per_step=rows_per_step)
     return _PIPE_CACHE[key][1]

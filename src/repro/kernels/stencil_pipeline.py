@@ -1,42 +1,62 @@
 """Fused line-buffered stencil pipeline — the paper's accelerator on TPU.
 
-One pl.pallas_call executes the *entire* pipeline DAG: the grid walks image
-rows; every stage computes its row of the frame each step, reading its
-producers' rows from VMEM ring buffers ("line buffers") and writing its own
-ring. Only the input row and the output row cross HBM per step — the HBM
-traffic of the whole pipeline is ~2 frames instead of ~2 frames *per stage*
-(what stage-by-stage XLA execution would do). This is the TPU-native
-embodiment of the paper's design:
+One pl.pallas_call executes the *entire* pipeline DAG: the grid walks the
+image in **row groups** of ``rows_per_step`` (R) rows; every stage computes
+its R rows of the frame each step, reading its producers' rows from VMEM
+ring buffers ("line buffers") and writing its own ring. Only the input
+rows and the output rows cross HBM per step — the HBM traffic of the
+whole pipeline is ~2 frames instead of ~2 frames *per stage* (what
+stage-by-stage XLA execution would do). This is the TPU-native embodiment
+of the paper's design:
 
   * line buffer   -> VMEM scratch ring of shape (ring_rows, W_pad)
-  * ring sizing   -> from the ImaGen plan (ilp.py / linebuffer.py); at row
-    granularity with same-step topological execution every consumer can
-    read the producer's current row, so rings need >= max consumer SH rows
-    — exactly the plan's line counts
-  * line coalescing -> the (8,128) float32 VMEM tile: ring_rows are padded
-    to a multiple of 8 sublanes, so packing multiple logical lines per
-    tile (vs one line per scratch buffer) is the paper's Sec. 6 in TPU
-    layout terms. We allocate one (ring_rows_pad8, W_pad128) scratch per
-    stage and report the VMEM footprint.
+  * ring sizing   -> from the ImaGen plan (ilp.py / linebuffer.py) grown
+    to cover one read slab: with R rows per step and same-step topological
+    execution, a consumer with stencil height SH reads its producer's last
+    ``R + SH - 1`` rows as one contiguous slab, so rings hold
+    ``max(plan physical lines, R + SH - 1)`` rows (codegen.row_group_rings)
+  * row-group blocking -> the TPU analogue of the coarser-granularity
+    mappings in push-memory / HWTool line-buffer chunking: at R=1 each
+    grid step moves one (1, W) row and the per-step grid overhead
+    dominates; at R=8 each step moves a full (8, 128k) float32 VMEM tile
+    per stage and the VPU sees 8x the work per step. Blocking changes the
+    schedule, not the math: the per-pixel computation graph is identical
+    across R. (The one caveat: XLA contracts mul+add chains into FMAs
+    differently per trace shape, so FMA-sensitive stages can differ by
+    ~1 ULP between R variants — see tests/test_row_group.py.)
+  * line coalescing -> ring rows are padded to lcm(R, 8) so every R-row
+    write slab is contiguous (write slots are multiples of R, stores
+    never wrap) and the ring is a whole number of (8, 128) sublane tiles
+    — the paper's Sec. 6 packing in TPU layout terms.
   * SRAM ports    -> no TPU analogue (VMEM is compiler-scheduled); the
     port-contention machinery matters for the ASIC/FPGA backend only.
-    DESIGN.md Sec. 2 records this assumption change.
+
+Ring I/O is vectorized: each edge read is a single contiguous load when
+it provably cannot wrap (SH == 1 — slab start and ring size are both
+multiples of R), and otherwise falls back to a two-segment wrap load
+(both ring segments materialized back-to-back, one dynamic slice picks
+the slab). Slot arithmetic is one positive-mod on the slab origin —
+not one rem per row. Top-of-frame masking is per-row within the slab,
+so frames batched back-to-back through the same rings never observe
+each other's residue, and the final partial row group of an
+``h % R != 0`` frame computes into padding rows that are cropped
+before returning (they are never read back: causal windows only look
+upward).
 
 The kernel body is generated from the DAG: stages execute in topological
-order inside the row loop, so the whole thing stays a single fused Pallas
-program. Stencil window math is plain VPU work (shift + multiply-add).
+order inside the row-group loop, so the whole thing stays a single fused
+Pallas program. Stencil window math is plain VPU work (shift + slice +
+multiply-add over (R, W, SH, SW) window tensors).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.codegen import PipelinePlan
+from repro.core.codegen import PipelinePlan, row_group_rings
 from repro.core.dag import PipelineDAG
 
 try:  # pltpu only resolves on TPU builds; interpret mode falls back to ANY
@@ -50,61 +70,75 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def _plan_rings(dag: PipelineDAG, plan: PipelinePlan | None) -> dict[str, int]:
-    """Ring rows per buffer owner: the ImaGen plan's physical line counts
-    (>= max consumer SH), or the minimal SH-based sizing when no plan."""
-    rings: dict[str, int] = {}
-    for p in dag.topo_order:
-        shs = [e.sh for e in dag.out_edges(p)
-               if not dag.stages[e.consumer].is_output]
-        if not shs:
-            continue
-        min_rows = max(shs)
-        if plan is not None and p in plan.alloc.buffers:
-            rings[p] = max(plan.alloc.buffers[p].n_lines_phys, min_rows)
-        else:
-            rings[p] = min_rows
-    return rings
+def _stage_read(ring_ref, ring_rows: int, row0: jnp.ndarray, rows_per_step: int,
+                sh: int, w: int) -> jnp.ndarray:
+    """Read the (R + sh - 1, w) slab of rows [row0 - sh + 1, row0 + R - 1]
+    from a ring buffer, masking rows above the frame top to zero.
+
+    Slot math is one positive-mod on the slab origin (``row0 - sh + 1``
+    can be negative by at most sh - 1 < ring_rows, so adding one period
+    suffices). Row r lives at slot r % ring_rows; the slab is contiguous
+    in ring space except when it crosses the ring end:
+
+      * sh == 1 fast path — the slab origin is ``row0``, a multiple of R,
+        and ring_rows is a multiple of R, so ``slot + R <= ring_rows``
+        always: one contiguous load, no wrap possible.
+      * wrap fallback — materialize the two ring segments back-to-back
+        (ring, then ring again) and take one dynamic (R + sh - 1)-row
+        slice; index ``slot + j`` of the doubled ring is slot
+        ``(row0 - sh + 1 + j) % ring_rows`` for every slab row j, wrap
+        or not.
+    """
+    s = rows_per_step + sh - 1
+    base = row0 - (sh - 1)
+    slot = jax.lax.rem(base + ring_rows, ring_rows)   # one rem per slab
+    if sh == 1:
+        # base = row0 >= 0: no row can be above the frame top, skip the mask
+        return pl.load(ring_ref, (pl.dslice(slot, s), pl.dslice(0, w)))
+    ring = pl.load(ring_ref, (pl.dslice(0, ring_rows), pl.dslice(0, w)))
+    seg2 = jnp.concatenate([ring, ring], axis=0)
+    slab = jax.lax.dynamic_slice(seg2, (slot, 0), (s, w))
+    live = (base + jnp.arange(s) >= 0)[:, None]       # per-row top mask
+    return jnp.where(live, slab, 0.0)
 
 
-def _row_window(rows: jnp.ndarray, sw: int) -> jnp.ndarray:
-    """(sh, W) producer rows -> (W, sh, sw) bottom-right-aligned windows."""
-    sh, w = rows.shape
-    padded = jnp.pad(rows, ((0, 0), (sw - 1, 0)))
-    cols = [padded[:, dx:dx + w] for dx in range(sw)]     # each (sh, W)
-    win = jnp.stack(cols, axis=-1)                        # (sh, W, sw)
-    return jnp.transpose(win, (1, 0, 2))                  # (W, sh, sw)
+def _slab_windows(slab: jnp.ndarray, rows_per_step: int, sh: int, sw: int,
+                  w: int) -> jnp.ndarray:
+    """(R + sh - 1, W) slab -> (R, W, sh, sw) bottom-right-aligned windows.
 
-
-def _stage_read(ring_ref, ring_rows: int, row: jnp.ndarray, sh: int, sw: int,
-                w: int) -> jnp.ndarray:
-    """Read the (sh, W) window rows [row-sh+1, row] from a ring buffer,
-    masking rows above the frame top to zero."""
-    rows = []
-    for k in range(sh - 1, -1, -1):
-        r = row - k
-        slot = jax.lax.rem(r + sh * ring_rows, ring_rows)  # positive mod
-        data = pl.load(ring_ref, (pl.dslice(slot, 1), pl.dslice(0, w)))
-        data = jnp.where(r >= 0, data, 0.0)
-        rows.append(data[0])
-    return jnp.stack(rows, axis=0)  # (sh, W) top..bottom
+    Pure shift-and-slice: sh + sw static slices of the slab, no per-row
+    python loop. Window (i, x, dy, dx) is pixel (row0 + i - sh + 1 + dy,
+    x - sw + 1 + dx) — the same causal alignment as the reference
+    executor's ``_windows``.
+    """
+    padded = jnp.pad(slab, ((0, 0), (sw - 1, 0)))
+    cols = jnp.stack([padded[:, dx:dx + w] for dx in range(sw)],
+                     axis=-1)                             # (S, W, sw)
+    return jnp.stack([cols[dy:dy + rows_per_step] for dy in range(sh)],
+                     axis=2)                              # (R, W, sh, sw)
 
 
 def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
                          plan: PipelinePlan | None, interpret: bool,
-                         batch: int | None):
+                         batch: int | None, rows_per_step: int = 1):
     """Shared kernel builder for the single-frame and batched executors.
 
-    The two variants differ only in rank: ``batch=None`` runs grid=(h,)
-    over (h, w_pad) arrays; an integer batch runs grid=(batch, h) over
-    (batch, h, w_pad). The topological stage loop — ring reads with
-    top-of-frame masking, window assembly with same-producer key dedup,
-    ring writes — is identical and lives here exactly once.
+    The two variants differ only in rank: ``batch=None`` runs
+    grid=(ceil(h/R),) over (h_pad, w_pad) arrays; an integer batch runs
+    grid=(batch, ceil(h/R)) over (batch, h_pad, w_pad). The topological
+    stage loop — slab ring reads with per-row top-of-frame masking,
+    window assembly with same-producer key dedup, R-row ring writes — is
+    identical and lives here exactly once.
     """
-    rings = _plan_rings(dag, plan)
+    r = rows_per_step
+    if r < 1:
+        raise ValueError(f"rows_per_step must be >= 1, got {r}")
+    n_groups = -(-h // r)
+    h_pad = n_groups * r
+    rings = row_group_rings(dag, plan.alloc.buffers if plan else None, r)
     w_pad = _round_up(w, 128)
-    ring_shapes = {p: (_round_up(r, 8), w_pad) for p, r in rings.items()}
-    vmem_bytes = sum(r * c * 4 for (r, c) in ring_shapes.values())
+    ring_shapes = {p: (rr, w_pad) for p, rr in rings.items()}
+    vmem_bytes = sum(rr * c * 4 for (rr, c) in ring_shapes.values())
     ring_owners = list(ring_shapes)
     inputs = dag.input_stages()
     out_stage = dag.output_stages()[0]
@@ -112,53 +146,53 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
     final = dag.in_edges(out_stage)[0].producer
 
     batched = batch is not None
-    row_axis = 1 if batched else 0      # program_id axis walking rows
-    lead = (0, 0) if batched else (0,)  # block-local index of the row
+    group_axis = 1 if batched else 0    # program_id axis walking row groups
+    lead = (0,) if batched else ()      # block-local leading index
 
     def kernel(*refs):
         in_refs = {name: refs[i] for i, name in enumerate(inputs)}
         out_ref = refs[len(inputs)]
         ring_refs = {p: refs[len(inputs) + 1 + i]
                      for i, p in enumerate(ring_owners)}
-        row = pl.program_id(row_axis)
+        row0 = pl.program_id(group_axis) * r    # first row of this group
 
         for name in dag.topo_order:
             st = dag.stages[name]
             if st.is_output:
                 continue
             if st.is_input:
-                val = in_refs[name][lead + (slice(0, w),)]
-            elif st.fn is None:  # relay
+                val = in_refs[name][lead + (slice(None), slice(0, w))]
+            elif st.fn is None:  # relay: identity on the producer's R rows
                 e = dag.in_edges(name)[0]
                 rr = ring_shapes[e.producer][0]
-                val = _stage_read(ring_refs[e.producer], rr, row, 1, 1, w)[0]
+                val = _stage_read(ring_refs[e.producer], rr, row0, r, 1, w)
             else:
                 wins = {}
                 seen = set()
                 for e in dag.in_edges(name):
                     rr = ring_shapes[e.producer][0]
-                    rows_ = _stage_read(ring_refs[e.producer], rr, row,
-                                        e.sh, e.sw, w)
+                    slab = _stage_read(ring_refs[e.producer], rr, row0, r,
+                                       e.sh, w)
                     key = (e.producer if e.producer not in seen
                            else f"{e.producer}#{e.sh}x{e.sw}")
                     seen.add(e.producer)
-                    wins[key] = _row_window(rows_, e.sw)
-                val = st.fn(wins)  # (W,)
+                    wins[key] = _slab_windows(slab, r, e.sh, e.sw, w)
+                val = st.fn(wins)  # (R, W)
             if name in ring_refs:
                 rr = ring_shapes[name][0]
-                slot = jax.lax.rem(row, rr)
+                # rr % R == 0 and row0 % R == 0: the write never wraps
+                slot = jax.lax.rem(row0, rr)
                 pl.store(ring_refs[name],
-                         (pl.dslice(slot, 1), pl.dslice(0, w)),
-                         val[None, :])
+                         (pl.dslice(slot, r), pl.dslice(0, w)), val)
             if name == final:
-                out_ref[lead + (slice(0, w),)] = val
+                out_ref[lead + (slice(None), slice(0, w))] = val
 
     if batched:
-        blk, index_map = (1, 1, w_pad), (lambda b, r: (b, r, 0))
-        grid, out_dims = (batch, h), (batch, h, w_pad)
+        blk, index_map = (1, r, w_pad), (lambda b, g: (b, g, 0))
+        grid, out_dims = (batch, n_groups), (batch, h_pad, w_pad)
     else:
-        blk, index_map = (1, w_pad), (lambda r: (r, 0))
-        grid, out_dims = (h,), (h, w_pad)
+        blk, index_map = (r, w_pad), (lambda g: (g, 0))
+        grid, out_dims = (n_groups,), (h_pad, w_pad)
     in_specs = [pl.BlockSpec(blk, index_map) for _ in inputs]
     out_specs = pl.BlockSpec(blk, index_map)
     if _HAVE_PLTPU:
@@ -180,40 +214,59 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
 
     @jax.jit
     def fn(images: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        # pad rows to the row-group boundary and cols to the lane tile;
+        # padding rows compute garbage that is cropped here and, being
+        # below every real row, is never read back (windows are causal)
         padded = [jnp.pad(jnp.asarray(images[n], jnp.float32),
-                          [(0, 0)] * (len(out_dims) - 1)
-                          + [(0, w_pad - w)]) for n in inputs]
+                          [(0, 0)] * (len(out_dims) - 2)
+                          + [(0, h_pad - h), (0, w_pad - w)])
+                  for n in inputs]
         out = call(*padded)
-        return out[..., :w]
+        return out[..., :h, :w]
 
     return fn, vmem_bytes
 
 
+def _resolve_rows(rows_per_step: int | None,
+                  plan: PipelinePlan | None) -> int:
+    if rows_per_step is not None:
+        return rows_per_step
+    return plan.rows_per_step if plan is not None else 1
+
+
 def make_pipeline_kernel(dag: PipelineDAG, h: int, w: int,
                          plan: PipelinePlan | None = None,
-                         interpret: bool = True):
+                         interpret: bool = True,
+                         rows_per_step: int | None = None):
     """Build a jit-compiled fused executor for ``dag`` on (h, w) images.
 
-    Returns (fn, vmem_bytes): fn maps {input_name: (h, w) float32} to the
-    (h, w) float32 output of the pipeline's output stage.
+    ``rows_per_step`` defaults to the plan's row-group field (1 when no
+    plan). Returns (fn, vmem_bytes): fn maps {input_name: (h, w) float32}
+    to the (h, w) float32 output of the pipeline's output stage.
     """
-    return _build_pipeline_call(dag, h, w, plan, interpret, batch=None)
+    return _build_pipeline_call(dag, h, w, plan, interpret, batch=None,
+                                rows_per_step=_resolve_rows(rows_per_step,
+                                                            plan))
 
 
 def make_batched_pipeline_kernel(dag: PipelineDAG, batch: int, h: int, w: int,
                                  plan: PipelinePlan | None = None,
-                                 interpret: bool = True):
+                                 interpret: bool = True,
+                                 rows_per_step: int | None = None):
     """Batched variant: one fused Pallas program over a frame batch.
 
-    The grid is (batch, h); frames execute back-to-back through the SAME
-    VMEM ring buffers — no per-frame re-allocation, no extra VMEM. This is
-    sound because every ring read is top-of-frame masked (rows above row 0
-    of the *current* frame read as zero), so frame b never observes frame
-    b-1's residue: any unmasked slot was rewritten earlier in frame b.
+    The grid is (batch, ceil(h/R)); frames execute back-to-back through
+    the SAME VMEM ring buffers — no per-frame re-allocation, no extra
+    VMEM. This is sound because every ring read is top-of-frame masked
+    per slab row (rows above row 0 of the *current* frame read as zero),
+    so frame b never observes frame b-1's residue: any unmasked slot was
+    rewritten earlier in frame b.
 
     Returns (fn, vmem_bytes): fn maps {input: (B, h, w)} -> (B, h, w).
     """
-    return _build_pipeline_call(dag, h, w, plan, interpret, batch=batch)
+    return _build_pipeline_call(dag, h, w, plan, interpret, batch=batch,
+                                rows_per_step=_resolve_rows(rows_per_step,
+                                                            plan))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -222,6 +275,9 @@ class StencilExecutor:
 
     ``batch=None`` wraps the single-frame kernel ((h, w) -> (h, w));
     an integer batch wraps the batched kernel ((B, h, w) -> (B, h, w)).
+    ``rows_per_step`` is the row-group blocking factor the kernel was
+    traced at; outputs are identical across values of it up to XLA's
+    shape-dependent FMA contraction (~1 ULP, see tests/test_row_group.py).
     The callable is jitted once at construction; every subsequent call is
     the steady-state cost only.
     """
@@ -229,6 +285,7 @@ class StencilExecutor:
     h: int
     w: int
     batch: int | None
+    rows_per_step: int
     vmem_bytes: int
     interpret: bool
     _fn: "callable" = dataclasses.field(repr=False)
@@ -244,8 +301,11 @@ class StencilExecutor:
 def make_executor(dag: PipelineDAG, h: int, w: int,
                   batch: int | None = None,
                   plan: PipelinePlan | None = None,
-                  interpret: bool = True) -> StencilExecutor:
+                  interpret: bool = True,
+                  rows_per_step: int | None = None) -> StencilExecutor:
     """Executor factory: DAG + shape (+ optional plan) -> StencilExecutor."""
-    fn, vmem = _build_pipeline_call(dag, h, w, plan, interpret, batch)
-    return StencilExecutor(dag=dag, h=h, w=w, batch=batch, vmem_bytes=vmem,
-                           interpret=interpret, _fn=fn)
+    r = _resolve_rows(rows_per_step, plan)
+    fn, vmem = _build_pipeline_call(dag, h, w, plan, interpret, batch,
+                                    rows_per_step=r)
+    return StencilExecutor(dag=dag, h=h, w=w, batch=batch, rows_per_step=r,
+                           vmem_bytes=vmem, interpret=interpret, _fn=fn)

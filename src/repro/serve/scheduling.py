@@ -70,6 +70,20 @@ def assemble_batch(queues: Mapping[Hashable, BoundedFifo], max_batch: int,
     return key, items
 
 
+def pad_batch(items: list, slots: int, make_idle: Callable[[], Any]) -> list:
+    """Fill a partial batch up to ``slots`` with idle entries.
+
+    Slot-based engines compile their executor once at the full batch size
+    and run partial batches with idle slots rather than recompiling per
+    fill level; this is the one place that padding policy lives. Raises
+    if the batch already overflows the slot count — that is an assembly
+    bug, not a padding concern.
+    """
+    if len(items) > slots:
+        raise ValueError(f"batch of {len(items)} exceeds {slots} slots")
+    return items + [make_idle() for _ in range(slots - len(items))]
+
+
 @dataclasses.dataclass
 class RunningStat:
     """Streaming mean/max/min (Welford-lite, no variance needed here)."""

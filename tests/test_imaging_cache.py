@@ -66,11 +66,37 @@ def test_mem_cfg_key_stable_and_distinct():
 def test_plan_cache_key_matches_cache_identity():
     cache = PlanCache()
     plan = cache.plan_for("unsharp-m", 24)
-    assert plan.cache_key == ("unsharp-m", 24, mem_cfg_key(DP))
+    assert plan.cache_key == ("unsharp-m", 24, mem_cfg_key(DP), 1)
     # the equivalent explicit per-stage spec hits the same cache slot
     full = {s: DP for s in cache.dag_for("unsharp-m").stages}
     assert cache.plan_for("unsharp-m", 24, mem=full) is plan
     assert cache.stats.plan_misses == 1
+
+
+def test_row_group_plan_derived_without_recompile():
+    """A plan differing only in rows_per_step is derived from its sibling:
+    no second ILP solve, distinct cache identity, bigger VMEM rings."""
+    cache = PlanCache()
+    p1 = cache.plan_for("unsharp-m", 24)
+    solve_s = cache.stats.plan_compile_s
+    p8 = cache.plan_for("unsharp-m", 24, rows_per_step=8)
+    assert p8 is not p1
+    assert p8.rows_per_step == 8 and p1.rows_per_step == 1
+    assert p8.cache_key[:3] == p1.cache_key[:3]
+    assert p8.schedule is p1.schedule and p8.alloc is p1.alloc
+    # derivation is dataclasses.replace, not a compile: ~no time accrued
+    assert cache.stats.plan_compile_s - solve_s < solve_s
+    assert p8.vmem_ring_bytes >= p1.vmem_ring_bytes
+    assert p8.fingerprint() != p1.fingerprint()
+    # rings must cover one read slab per consumer edge and stay divisible
+    # into 8-row write groups
+    rings = p8.vmem_rings()
+    dag = cache.dag_for("unsharp-m")
+    for owner, rows in rings.items():
+        shs = [e.sh for e in dag.out_edges(owner)
+               if not dag.stages[e.consumer].is_output]
+        assert rows >= 8 + max(shs) - 1
+        assert rows % 8 == 0
 
 
 def test_plan_fingerprint_and_dict():

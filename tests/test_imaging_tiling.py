@@ -66,10 +66,14 @@ def test_tiled_single_tile_degenerates_to_plain_execution():
 
 
 def test_tiled_executor_compiles_once_per_tile_shape():
+    """One ILP solve per tile shape; one executor per (tile shape, chunk
+    size) — the trailing partial batch gets a tail-sized executor instead
+    of dead-weight zero-tile padding, and both are reused across frames."""
     cache = PlanCache()
     for _ in range(3):                      # 3 frames, same tile shape
         img = RNG.rand(50, 100).astype(np.float32)
         execute_tiled(cache, "unsharp-m", {"in": img}, 40, 48, batch=4)
-    assert cache.stats.plan_misses == 1
-    assert cache.stats.exec_misses == 1
-    assert cache.stats.exec_hits >= 2
+    assert cache.stats.plan_misses == 1     # ILP ran exactly once
+    # 6 tiles -> chunks of 4 and 2: two executors, hit on every later frame
+    assert cache.stats.exec_misses == 2
+    assert cache.stats.exec_hits >= 4

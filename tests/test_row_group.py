@@ -1,0 +1,124 @@
+"""Row-group execution: R > 1 must be a pure scheduling change.
+
+The row-group executor computes R rows per grid step through the same
+ring buffers, slab reads, and stage payloads as the R=1 path; outputs
+must be identical. One caveat keeps these assertions honest: XLA CPU
+contracts mul+add chains into FMAs differently depending on trace
+shapes, so two *bitwise-identical computations* traced at (1, W) vs
+(8, W) can differ by one ULP on contraction-sensitive stages (e.g.
+``sqrt(gx^2 + gy^2)``), and that wobble amplifies a few ULP through
+deep chains. The suite therefore asserts exact equality first and
+falls back to a tight ULP ceiling — anything structural (wrong slab
+row, missing top mask, ring wrap bug) is orders of magnitude larger
+and still fails.
+"""
+import numpy as np
+import pytest
+
+from repro.core import algorithms
+from repro.imaging import PlanCache, execute_tiled
+from repro.kernels import ref
+from repro.kernels.stencil_pipeline import make_executor
+
+RNG = np.random.RandomState(3)
+ALL = sorted(algorithms.ALGORITHMS)
+
+
+@pytest.fixture(scope="module")
+def cache():
+    return PlanCache()
+
+
+def assert_rowgroup_equal(got, exp):
+    got, exp = np.asarray(got), np.asarray(exp)
+    if (got == exp).all():
+        return
+    # a 1-ULP contraction wobble in an early stage amplifies through deep
+    # chains (canny is 7 compute stages); 32 ULP ~ 2e-6 relative, while a
+    # structural bug (wrong slab row, missing mask) is ~1e6 ULP
+    np.testing.assert_array_max_ulp(got, exp, maxulp=32)
+
+
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("rows", [4, 8])
+def test_single_frame_matches_r1(cache, name, rows):
+    """h % R != 0 on every pipeline: the final partial row group must be
+    handled without reading past h."""
+    h, w = 21, 24
+    img = RNG.rand(h, w).astype(np.float32)
+    exp = cache.executor_for(name, h, w, rows_per_step=1)({"in": img})
+    got = cache.executor_for(name, h, w, rows_per_step=rows)({"in": img})
+    assert got.shape == (h, w)
+    assert_rowgroup_equal(got, exp)
+    # and the R=1 baseline itself matches the pure-jnp oracle
+    np.testing.assert_allclose(
+        np.asarray(exp),
+        np.asarray(ref.stencil_pipeline_ref(cache.dag_for(name),
+                                            {"in": img})),
+        rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["canny-m", "xcorr-m"])
+def test_frame_shorter_than_row_group(cache, name):
+    """h < R: a single partial group covers the whole frame."""
+    h, w = 5, 24
+    img = RNG.rand(h, w).astype(np.float32)
+    exp = cache.executor_for(name, h, w, rows_per_step=1)({"in": img})
+    got = cache.executor_for(name, h, w, rows_per_step=8)({"in": img})
+    assert got.shape == (h, w)
+    assert_rowgroup_equal(got, exp)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_batched_matches_r1(cache, name):
+    """Batched grid (B, ceil(h/R)): frames stream back-to-back through
+    the same rings; per-row top masking isolates them even when the last
+    row group of the previous frame was padding."""
+    b, h, w = 3, 21, 24
+    frames = RNG.rand(b, h, w).astype(np.float32)
+    ex1 = cache.executor_for(name, h, w, rows_per_step=1)
+    got = cache.executor_for(name, h, w, batch=b, rows_per_step=8)(
+        {"in": frames})
+    assert got.shape == (b, h, w)
+    for i in range(b):
+        assert_rowgroup_equal(got[i], ex1({"in": frames[i]}))
+
+
+@pytest.mark.parametrize("hw", [(50, 100), (37, 101)])
+def test_tiled_matches_r1_and_reference(cache, hw):
+    """Tiled execution picks R from the tile shape; the stitched frame
+    must match both the R=1 tiled run and the whole-frame oracle."""
+    h, w = hw
+    img = RNG.rand(h, w).astype(np.float32)
+    got = execute_tiled(cache, "canny-m", {"in": img}, 40, 48, batch=4)
+    exp1 = execute_tiled(cache, "canny-m", {"in": img}, 40, 48, batch=4,
+                         rows_per_step=1)
+    assert_rowgroup_equal(got, exp1)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.stencil_pipeline_ref(cache.dag_for("canny-m"),
+                                            {"in": img})),
+        rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["unsharp-m", "denoise-m"])
+def test_unplanned_rings_row_grouped(name):
+    """plan=None minimal rings also support R > 1 — sizing comes from
+    codegen.row_group_rings either way."""
+    dag = algorithms.ALGORITHMS[name]()
+    img = RNG.rand(18, 16).astype(np.float32)
+    exp = make_executor(dag, 18, 16, plan=None, rows_per_step=1)(
+        {"in": img})
+    got = make_executor(dag, 18, 16, plan=None, rows_per_step=8)(
+        {"in": img})
+    assert_rowgroup_equal(got, exp)
+
+
+def test_executor_carries_and_keys_on_rows_per_step(cache):
+    e1 = cache.executor_for("harris-s", 16, 24, rows_per_step=1)
+    e8 = cache.executor_for("harris-s", 16, 24, rows_per_step=8)
+    assert e1 is not e8
+    assert (e1.rows_per_step, e8.rows_per_step) == (1, 8)
+    assert cache.executor_for("harris-s", 16, 24, rows_per_step=8) is e8
+    # bigger rings at R=8: the slab (R + sh - 1) dominates the plan lines
+    assert e8.vmem_bytes >= e1.vmem_bytes
