@@ -1,0 +1,65 @@
+"""Video-serving quickstart: temporal pipelines, frame rings, streams.
+
+    PYTHONPATH=src python examples/stream_video.py
+
+Walks the temporal subsystem end to end: a DSL pipeline with a temporal
+read, the frame-ring executor driven by hand, and a VideoEngine
+multiplexing two streams of the same pipeline without sharing history.
+"""
+import numpy as np
+
+from repro.core import algorithms
+from repro.core.dsl import Pipeline
+from repro.imaging import PlanCache
+from repro.kernels import ref
+from repro.video import VideoEngine, VideoFrame, make_video_executor
+
+rng = np.random.RandomState(0)
+T, H, W = 12, 32, 48
+
+# 1. a temporal pipeline in the DSL: reads are (ref, st, sh, sw) — this
+# one sharpens each frame against a 3-frame, 3x3 spatio-temporal mean
+p = Pipeline("my-tunsharp")
+x = p.input("in")
+avg = p.stage("stavg", [(x, 3, 3, 3)], algorithms.stmean_fn(3, 3, 3))
+sh = p.stage("sharp", [(x, 1, 1), (avg, 1, 1)], algorithms.tunsharp_fn)
+p.output("out", [(sh, 1, 1)])
+dag = p.build()
+print(f"{dag.name}: temporal depth {dag.temporal_depths()}, "
+      f"cumulative extent (back, up, left) = "
+      f"{dag.cumulative_extent(temporal=True)}")
+
+# 2. the executor, driven by hand: history is explicit state — zeros at
+# stream start (warm-up), rolled forward by every call
+ex = make_video_executor(dag, H, W, rows_per_step=8)
+state = ex.init_state()
+vid = rng.rand(T, H, W).astype(np.float32)
+outs = []
+for t in range(T):
+    out, state = ex({"in": vid[t]}, state)
+    outs.append(np.asarray(out))
+exp = np.asarray(ref.video_pipeline_ref(dag, {"in": vid}))
+print(f"hand-driven stream: max|err| vs multi-frame reference = "
+      f"{np.abs(np.stack(outs) - exp).max():.2e}, "
+      f"frame-ring state {ex.frame_state_bytes} B, "
+      f"VMEM rings {ex.vmem_bytes} B, warm-up {ex.warmup_frames} frames")
+
+# 3. the engine: two interleaved streams of a registered pipeline — the
+# compiled executor is shared, the frame rings are not
+cache = PlanCache()
+eng = VideoEngine(cache=cache, chunk=4)
+vids = [rng.rand(T, H, W).astype(np.float32) for _ in range(2)]
+sids = [eng.open_stream("tbackground-t", H, W) for _ in range(2)]
+results = eng.run({sid: [{"in": f} for f in v]
+                   for sid, v in zip(sids, vids)})
+for sid, v in zip(sids, vids):
+    exp = np.asarray(ref.video_pipeline_ref(cache.dag_for("tbackground-t"),
+                                            {"in": v}))
+    got = np.stack([np.asarray(o) for o in results[sid]])
+    print(f"stream {sid}: {len(results[sid])} frames, "
+          f"max|err| vs own reference = {np.abs(got - exp).max():.2e}")
+snap = eng.snapshot()
+print(f"engine: {snap['frames_completed']} frames, "
+      f"{snap['fps_execute']:.1f} f/s (execute), warm-up latency "
+      f"{snap['warmup_latency']['mean'] * 1e3:.1f} ms, "
+      f"VMEM high-water {snap['vmem_high_water_bytes']} B")

@@ -17,7 +17,7 @@ from functools import partial
 import jax.numpy as jnp
 import numpy as np
 
-from .dag import PipelineDAG
+from .dag import PipelineDAG, window_keys
 from .dsl import Pipeline
 
 
@@ -213,6 +213,105 @@ ALGORITHMS = {
     "unsharp-m": unsharp_m, "xcorr-m": xcorr_m, "denoise-m": denoise_m,
 }
 
+
+# ---------------------------------------------------- temporal window fns
+# Temporal windows arrive as [..., st, sh, sw] (axis -3 is time, causal:
+# index st-1 is the current frame, index 0 the oldest; frames before the
+# stream start read as zero, exactly like the spatial zero padding).
+# Reductions are unrolled with python loops and scalar taps — the same
+# discipline as conv_fn — so the reference executor and the Pallas kernel
+# trace identical accumulation orders and can be compared bitwise.
+def stmean_fn(st: int, sh: int = 1, sw: int = 1):
+    """Mean over an (st, sh, sw) spatio-temporal box."""
+    k = 1.0 / float(st * sh * sw)
+
+    def fn(wins):
+        win = _single(wins)
+        acc = None
+        for dt in range(st):
+            for dy in range(sh):
+                for dx in range(sw):
+                    term = win[..., dt, dy, dx]
+                    acc = term if acc is None else acc + term
+        return acc * k
+    return fn
+
+
+def frame_diff_fn(wins):
+    """|current - previous| of a (2, 1, 1) temporal window."""
+    win = _single(wins)
+    return jnp.abs(win[..., 1, 0, 0] - win[..., 0, 0, 0])
+
+
+def bg_subtract_fn(wins, lo=0.25):
+    """Foreground mask: |current - background| thresholded."""
+    cur = wins["in"][..., 0, 0]
+    bg = [v for k, v in wins.items() if k != "in"][0][..., 0, 0]
+    d = jnp.abs(cur - bg)
+    return jnp.where(d > lo, d, 0.0)
+
+
+def tunsharp_fn(wins):
+    """Unsharp along time: boost what moved vs. the temporal average."""
+    cur = wins["in"][..., 0, 0]
+    avg = [v for k, v in wins.items() if k != "in"][0][..., 0, 0]
+    return cur + 1.5 * (cur - avg)
+
+
+# ------------------------------------------------------- video pipelines
+def tdenoise_t() -> PipelineDAG:
+    """Temporal-average denoise: mean of the last 4 frames, then a 3x3
+    spatial blur — a spatial stage downstream of a temporal one."""
+    p = Pipeline("tdenoise-t")
+    x = p.input("in")
+    ta = p.stage("tavg", [(x, 4, 1, 1)], stmean_fn(4))
+    b = p.stage("blur", [(ta, 3, 3)], conv_fn(G3))
+    p.output("out", [(b, 1, 1)])
+    return p.build()
+
+
+def tmotion_t() -> PipelineDAG:
+    """Frame-difference motion mask: |in_t - in_{t-1}|, spatially
+    smoothed, thresholded."""
+    p = Pipeline("tmotion-t")
+    x = p.input("in")
+    d = p.stage("diff", [(x, 2, 1, 1)], frame_diff_fn)
+    b = p.stage("blur", [(d, 3, 3)], conv_fn(G3))
+    th = p.stage("th", [(b, 1, 1)], partial(thresh_fn, lo=0.05))
+    p.output("out", [(th, 1, 1)])
+    return p.build()
+
+
+def tbackground_t() -> PipelineDAG:
+    """Background subtraction with a running mean: the background
+    estimate is the mean of the last 8 input frames (the frame-ring
+    embodiment of a running mean — a box window over the ring depth,
+    where a true EMA would need recursive state)."""
+    p = Pipeline("tbackground-t")
+    x = p.input("in")                                    # MC stage
+    bg = p.stage("bg", [(x, 8, 1, 1)], stmean_fn(8))
+    fg = p.stage("fg", [(x, 1, 1), (bg, 1, 1)], bg_subtract_fn)
+    p.output("out", [(fg, 1, 1)])
+    return p.build()
+
+
+def tunsharp_t() -> PipelineDAG:
+    """3-frame unsharp-over-time: sharpen against a 3x3x3 spatio-temporal
+    mean — the one pipeline whose temporal taps carry a spatial window,
+    so each tap streams an (R + 2, W) slab, not a row."""
+    p = Pipeline("tunsharp-t")
+    x = p.input("in")                                    # MC stage
+    sa = p.stage("stavg", [(x, 3, 3, 3)], stmean_fn(3, 3, 3))
+    sh = p.stage("sharp", [(x, 1, 1), (sa, 1, 1)], tunsharp_fn)
+    p.output("out", [(sh, 1, 1)])
+    return p.build()
+
+
+VIDEO_ALGORITHMS = {
+    "tdenoise-t": tdenoise_t, "tmotion-t": tmotion_t,
+    "tbackground-t": tbackground_t, "tunsharp-t": tunsharp_t,
+}
+
 # Paper Sec. 7: 320p = 480x320, 1080p = 1920x1080 (W x H)
 RESOLUTIONS = {"320p": (480, 320), "1080p": (1920, 1080)}
 
@@ -263,7 +362,14 @@ def _windows(img: jnp.ndarray, sh: int, sw: int) -> jnp.ndarray:
 
 def execute_reference(dag: PipelineDAG, inputs: dict[str, jnp.ndarray]
                       ) -> dict[str, jnp.ndarray]:
-    """Pure-jnp oracle: run every stage over full images, topo order."""
+    """Pure-jnp oracle: run every stage over full images, topo order.
+
+    Single-frame only: a temporal pipeline (any edge with st > 1) has no
+    meaning on one frame — use :func:`execute_reference_video`.
+    """
+    if dag.is_temporal():
+        raise ValueError(f"{dag.name} has temporal edges; use "
+                         f"execute_reference_video")
     vals: dict[str, jnp.ndarray] = {}
     for name in dag.topo_order:
         st = dag.stages[name]
@@ -274,15 +380,59 @@ def execute_reference(dag: PipelineDAG, inputs: dict[str, jnp.ndarray]
         if st.fn is None:  # relay or output: identity on single producer
             vals[name] = vals[ins[0].producer]
             continue
-        wins = {e.producer: _windows(vals[e.producer], e.sh, e.sw)
-                for e in ins}
-        # a stage reading two windows from one producer: key by producer
-        # only works when shapes differ; keep the larger under the name and
-        # the 1x1 under name as well -> disambiguate by collecting per edge
-        if len({e.producer for e in ins}) != len(ins):
-            wins = {}
-            for e in ins:
-                key = e.producer if e.producer not in wins else f"{e.producer}#{e.sh}x{e.sw}"
-                wins[key] = _windows(vals[e.producer], e.sh, e.sw)
+        wins = {k: _windows(vals[e.producer], e.sh, e.sw)
+                for k, e in zip(window_keys(ins), ins)}
         vals[name] = st.fn(wins)
     return vals
+
+
+def execute_reference_video(dag: PipelineDAG,
+                            videos: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Multi-frame oracle: (T, H, W) inputs -> (T, H, W) output.
+
+    Frames run in stream order through plain per-frame stage evaluation;
+    each temporal producer's last d-1 frames are kept in a python-side
+    history list (most recent first). Frames before t = 0 read as zero —
+    the same causal zero padding as the spatial frame top/left, and the
+    warm-up semantics the VideoEngine reproduces.
+    """
+    t_frames = next(iter(videos.values())).shape[0]
+    depths = dag.temporal_depths()
+    history: dict[str, list[jnp.ndarray]] = {p: [] for p in depths}
+    outs = []
+    zero = None
+    for t in range(t_frames):
+        vals: dict[str, jnp.ndarray] = {}
+        for name in dag.topo_order:
+            st = dag.stages[name]
+            if st.is_input:
+                vals[name] = jnp.asarray(videos[name][t], dtype=jnp.float32)
+                if zero is None:
+                    zero = jnp.zeros_like(vals[name])
+                continue
+            ins = dag.in_edges(name)
+            if st.fn is None:
+                vals[name] = vals[ins[0].producer]
+                continue
+            wins = {}
+            for k, e in zip(window_keys(ins), ins):
+                if e.st == 1:
+                    wins[k] = _windows(vals[e.producer], e.sh, e.sw)
+                    continue
+                past = history[e.producer]
+                taps = []
+                for dt in range(e.st):           # dt=0 oldest .. st-1 now
+                    j = e.st - 1 - dt            # frames back
+                    if j == 0:
+                        frame = vals[e.producer]
+                    elif j <= len(past):
+                        frame = past[j - 1]
+                    else:
+                        frame = zero
+                    taps.append(_windows(frame, e.sh, e.sw))
+                wins[k] = jnp.stack(taps, axis=2)    # (H, W, st, sh, sw)
+            vals[name] = st.fn(wins)
+        for p, d in depths.items():
+            history[p] = [vals[p]] + history[p][:d - 2]
+        outs.append(vals[dag.output_stages()[0]])
+    return jnp.stack(outs)

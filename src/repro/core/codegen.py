@@ -75,10 +75,52 @@ def row_group_rings(dag: PipelineDAG, alloc_buffers: Mapping | None,
 
 def row_group_vmem_bytes(dag: PipelineDAG, alloc_buffers: Mapping | None,
                          rows_per_step: int, w: int) -> int:
-    """float32 VMEM footprint of the row-group rings at line width ``w``."""
+    """float32 VMEM footprint of the row-group rings at line width ``w``,
+    including the temporal tap rings of a video pipeline."""
     w_pad = -(-w // 128) * 128
     rings = row_group_rings(dag, alloc_buffers, rows_per_step)
-    return sum(r * w_pad * 4 for r in rings.values())
+    taps = temporal_tap_rings(dag, rows_per_step)
+    return sum(r * w_pad * 4 for r in rings.values()) \
+        + sum(r * w_pad * 4 for r in taps.values())
+
+
+def tap_name(producer: str, j: int) -> str:
+    """Display/ring name of temporal tap ``j`` (frames back) of a producer."""
+    return f"{producer}@t-{j}"
+
+
+def temporal_taps(dag: PipelineDAG) -> list[tuple[str, int]]:
+    """(producer, j) for every history tap a temporal pipeline needs.
+
+    An edge with temporal extent st reads its producer at offsets
+    j = 0..st-1 frames back; j = 0 is the producer's live ring, each
+    j >= 1 is a *pseudo-input* — the producer's frame from j steps ago,
+    streamed from the device-resident frame ring. Deterministic order:
+    topo position of the producer, then ascending j.
+    """
+    depths = dag.temporal_depths()
+    return [(p, j) for p in dag.topo_order
+            for j in range(1, depths.get(p, 1))]
+
+
+def temporal_tap_rings(dag: PipelineDAG, rows_per_step: int
+                       ) -> dict[tuple[str, int], int]:
+    """VMEM ring rows per temporal tap pseudo-input.
+
+    Tap (p, j) feeds every edge from p with st > j; like any producer its
+    ring must hold one read slab — ``R + max_sh - 1`` rows over those
+    edges — rounded to the same lcm(R, 8) quantum as the spatial rings
+    (see :func:`row_group_rings`). These rings have no line-buffer plan
+    to grow from: history frames stream from HBM, so the slab is the
+    whole requirement.
+    """
+    quantum = math.lcm(rows_per_step, 8)
+    rings: dict[tuple[str, int], int] = {}
+    for (p, j) in temporal_taps(dag):
+        sh = max(e.sh for e in dag.out_edges(p) if e.st > j)
+        need = rows_per_step + sh - 1
+        rings[(p, j)] = -(-need // quantum) * quantum
+    return rings
 
 
 @dataclasses.dataclass
@@ -119,15 +161,35 @@ class PipelinePlan:
                 self.rows_per_step)
 
     def vmem_rings(self) -> dict[str, int]:
-        """Physical VMEM ring rows per buffer for the row-group executor."""
-        return row_group_rings(self.dag, self.alloc.buffers,
-                               self.rows_per_step)
+        """Physical VMEM ring rows per buffer for the row-group executor,
+        temporal tap rings included (keyed ``producer@t-j``)."""
+        rings = row_group_rings(self.dag, self.alloc.buffers,
+                                self.rows_per_step)
+        for (p, j), rr in temporal_tap_rings(self.dag,
+                                             self.rows_per_step).items():
+            rings[tap_name(p, j)] = rr
+        return rings
 
     @property
     def vmem_ring_bytes(self) -> int:
         """float32 VMEM the Pallas embodiment of this plan allocates."""
         return row_group_vmem_bytes(self.dag, self.alloc.buffers,
                                     self.rows_per_step, self.w)
+
+    @property
+    def frame_depths(self) -> dict[str, int]:
+        """Producer -> frames of history its consumers read (entries > 1).
+        The frame-ring analogue of ``alloc.buffers``: producer p must keep
+        its last ``frame_depths[p] - 1`` frames device-resident."""
+        return self.dag.temporal_depths()
+
+    def vmem_frame_bytes(self, h: int) -> int:
+        """float32 bytes of device-resident frame-ring state at frame
+        height ``h`` — (d-1) full (h, w) frames per temporal producer.
+        Height is an execution-shape parameter (like the executor's h),
+        so this is a method where ``vmem_ring_bytes`` is a property."""
+        return sum((d - 1) * h * self.w * 4
+                   for d in self.frame_depths.values())
 
     def to_dict(self) -> dict:
         """JSON-serializable structural summary of the compiled plan.
@@ -143,6 +205,7 @@ class PipelinePlan:
             "rows_per_step": self.rows_per_step,
             "vmem_rings": self.vmem_rings(),
             "vmem_ring_bytes": self.vmem_ring_bytes,
+            "frame_depths": self.frame_depths,
             "schedule": dict(self.schedule.starts),
             "buffers": {
                 p: {"n_lines": b.n_lines, "n_lines_phys": b.n_lines_phys,
@@ -171,12 +234,16 @@ class PipelinePlan:
                 f"{b.n_lines}) pack={b.pack} blocks={b.n_blocks} x "
                 f"{b.bits_per_block}b ports={b.cfg.ports} "
                 f"regs={b.window_regs}")
+        for p, d in self.frame_depths.items():
+            lines.append(f"framering {p}: frames={d - 1} x (H x {self.w})")
         for s in self.dag.topo_order:
             st = self.dag.stages[s]
             kind = ("input" if st.is_input else
                     "output" if st.is_output else "stage")
-            reads = ", ".join(f"{e.producer}[{e.sh}x{e.sw}]"
-                              for e in self.dag.in_edges(s))
+            reads = ", ".join(
+                f"{e.producer}[{e.sh}x{e.sw}]" if e.st == 1
+                else f"{e.producer}[{e.st}x{e.sh}x{e.sw}]"
+                for e in self.dag.in_edges(s))
             lines.append(f"{kind} {s} @ S={self.schedule.starts[s]}"
                          + (f" reads {reads}" if reads else ""))
         return "\n".join(lines)
@@ -187,7 +254,8 @@ def compile_pipeline(dag: PipelineDAG, w: int,
                      objective: str = "exact",
                      prune: bool = True,
                      max_pad_iters: int = 8,
-                     rows_per_step: int = 1) -> PipelinePlan:
+                     rows_per_step: int = 1,
+                     frame_h: int = 0) -> PipelinePlan:
     """Front door: DAG + memory spec -> scheduled, allocated plan.
 
     After scheduling, the allocation is validated by the cycle-accurate
@@ -195,6 +263,10 @@ def compile_pipeline(dag: PipelineDAG, w: int,
     the oldest consumer's reads (a corner the paper's logical-line model
     misses — see simulate.py) get their ring padded by one slot group at a
     time until the simulation is clean. The schedule never changes.
+
+    ``frame_h`` folds temporal frame-ring pixels into the schedule's
+    reported objective (see ilp.build_problem); it never affects the
+    solve, so plans are still height-independent artifacts.
     """
     if isinstance(mem, MemConfig):
         cfg_of = {s: mem for s in dag.stages}
@@ -202,7 +274,8 @@ def compile_pipeline(dag: PipelineDAG, w: int,
         cfg_of = dict(mem)
         for s in dag.stages:
             cfg_of.setdefault(s, DP)
-    prob = build_problem(dag, w, mem_cfg=cfg_of, prune=prune)
+    prob = build_problem(dag, w, mem_cfg=cfg_of, prune=prune,
+                         frame_h=frame_h)
     sched = solve_schedule(prob, objective=objective)
 
     extra: dict[str, int] = {}

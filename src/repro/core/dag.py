@@ -18,15 +18,45 @@ from typing import Callable, Mapping, Sequence
 
 @dataclasses.dataclass(frozen=True)
 class Edge:
-    """Producer -> consumer edge with stencil window (SH, SW)."""
+    """Producer -> consumer edge with stencil window (ST, SH, SW).
+
+    ``(sh, sw)`` is the spatial window within one frame; ``st`` is the
+    temporal extent — how many frames of the producer the consumer reads,
+    causally aligned like the spatial axes: output frame t reads producer
+    frames ``t-st+1 .. t``. ``st=1`` (the default) is a purely spatial
+    edge, which is why it trails the spatial fields despite the DSL
+    writing reads as ``(ref, st, sh, sw)``.
+    """
     producer: str
     consumer: str
     sh: int  # stencil height
     sw: int  # stencil width
+    st: int = 1  # temporal extent (frames, incl. the current one)
 
     def __post_init__(self):
         if self.sh < 1 or self.sw < 1:
             raise ValueError(f"stencil must be >=1x1, got {self.sh}x{self.sw}")
+        if self.st < 1:
+            raise ValueError(f"temporal extent must be >=1, got {self.st}")
+
+
+def window_keys(edges: Sequence[Edge]) -> list[str]:
+    """Key per in-edge for the stage-fn ``wins`` dict, in edge order.
+
+    A stage's window dict is keyed by producer name; a stage reading two
+    windows from the *same* producer (e.g. xcorr's 18x1 + 1x1 taps) gets
+    the repeat keyed ``producer#STxSHxSW``. Both executors (the pure-jnp
+    reference and the Pallas kernel) must agree on this keying, so it
+    lives here, next to the Edge definition.
+    """
+    keys, seen = [], set()
+    for e in edges:
+        if e.producer not in seen:
+            keys.append(e.producer)
+        else:
+            keys.append(f"{e.producer}#{e.st}x{e.sh}x{e.sw}")
+        seen.add(e.producer)
+    return keys
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,26 +155,46 @@ class PipelineDAG:
     def num_stages(self) -> int:
         return len(self.stages)
 
-    def cumulative_extent(self) -> tuple[int, int]:
-        """(up, left) dependency halo of the output on the input image.
+    def cumulative_extent(self, temporal: bool = False
+                          ) -> tuple[int, int] | tuple[int, int, int]:
+        """(up, left) — or (back, up, left) — dependency halo of the output.
 
         Windows are causal (bottom-right aligned): stage output pixel
-        (r, x) reads producer rows r-sh+1..r and cols x-sw+1..x. Chaining
-        edges therefore accumulates (sh-1, sw-1) per hop; joins take the
-        max over in-edges. The result is the halo a tile executor must
-        prepend (above/left) so every output pixel of the tile sees its
-        full input dependency cone.
+        (r, x) of frame t reads producer frames t-st+1..t, rows
+        r-sh+1..r, cols x-sw+1..x. Chaining edges therefore accumulates
+        (st-1, sh-1, sw-1) per hop; joins take the max over in-edges. The
+        spatial legs are the halo a tile executor must prepend (above/
+        left) so every output pixel of the tile sees its full input
+        dependency cone; the temporal leg ``back`` is how many *past*
+        input frames the current output frame depends on — the warm-up
+        depth of a streaming video session. ``temporal=False`` (the
+        default) keeps the historical 2-tuple for spatial callers.
         """
-        ext: dict[str, tuple[int, int]] = {}
+        ext: dict[str, tuple[int, int, int]] = {}
         for name in self.topo_order:
             ins = self.in_edges(name)
             if not ins:
-                ext[name] = (0, 0)
+                ext[name] = (0, 0, 0)
                 continue
             ext[name] = (
-                max(ext[e.producer][0] + e.sh - 1 for e in ins),
-                max(ext[e.producer][1] + e.sw - 1 for e in ins))
-        return ext[self.output_stages()[0]]
+                max(ext[e.producer][0] + e.st - 1 for e in ins),
+                max(ext[e.producer][1] + e.sh - 1 for e in ins),
+                max(ext[e.producer][2] + e.sw - 1 for e in ins))
+        back, up, left = ext[self.output_stages()[0]]
+        return (back, up, left) if temporal else (up, left)
+
+    def temporal_depths(self) -> dict[str, int]:
+        """Producer -> max temporal extent over its out-edges (entries > 1
+        only). A producer with depth d must keep its last d-1 frames in a
+        frame ring; spatial-only pipelines return {}."""
+        depths: dict[str, int] = {}
+        for e in self.edges:
+            if e.st > 1:
+                depths[e.producer] = max(depths.get(e.producer, 1), e.st)
+        return depths
+
+    def is_temporal(self) -> bool:
+        return any(e.st > 1 for e in self.edges)
 
     def validate(self) -> None:
         for n, s in self.stages.items():
@@ -157,6 +207,14 @@ class PipelineDAG:
                 raise ValueError(f"output stage {n} has out-edges")
             if not s.is_output and not outs:
                 raise ValueError(f"non-output stage {n} has no consumers")
+            for e in ins:
+                # outputs stream the current frame 1x1; relays (fn=None)
+                # are spatial 1x1 identities — neither can hold history
+                if e.st > 1 and (s.is_output or s.fn is None):
+                    kind = "output" if s.is_output else "relay"
+                    raise ValueError(
+                        f"{kind} stage {n} cannot read a temporal window "
+                        f"(st={e.st}) from {e.producer}")
 
     def __repr__(self) -> str:
         return (f"PipelineDAG({self.name}, stages={len(self.stages)}, "

@@ -49,11 +49,19 @@ class Schedule:
     w: int
     starts: dict[str, int]              # stage -> start cycle
     buffer_lines: dict[str, int]        # buffer owner -> line count
-    total_pixels: int                   # sum of LB sizes in pixels (Eq. 1a)
+    total_pixels: int                   # LB + frame-ring pixels (Eq. 1a ext.)
     enforced: list[PairConstraint]
     n_branches: int
     solve_ms: float
     objective_mode: str
+    # Temporal extension: producers whose consumers read st > 1 frames
+    # keep their last st-1 frames in a frame ring — the one-axis-up
+    # analogue of a line buffer. Ring size is (st-1) * frame_h * W pixels:
+    # schedule-independent (a whole frame of delay per tap, vs. the
+    # line buffer's schedule-dependent fraction of a frame), so it enters
+    # the objective as a constant — counted, but never steering the ILP.
+    frame_depths: dict[str, int] = dataclasses.field(default_factory=dict)
+    frame_pixels: int = 0
 
     def lb_pixels(self, p: str) -> int:
         return self.buffer_lines[p] * self.w
@@ -67,6 +75,16 @@ class ScheduleProblem:
     var_of: dict[str, str]                      # stage -> schedule variable
     port_problem: PortConstraintProblem
     extra_causality: list[tuple[str, str, int]]  # (early_var, late_var, min_delta)
+    frame_h: int = 0                            # frame height for frame-ring
+    #                                            pixel accounting (0 = skip)
+
+    @property
+    def frame_ring_pixels(self) -> int:
+        """Pixels held in frame rings: (st-1) full frames per temporal
+        producer (see Schedule.frame_depths). Constant w.r.t. the
+        schedule variables — accounted in the objective, not optimized."""
+        return sum((d - 1) * self.frame_h * self.w
+                   for d in self.dag.temporal_depths().values())
 
     @property
     def buffer_owners(self) -> list[str]:
@@ -79,12 +97,19 @@ class ScheduleProblem:
 def build_problem(dag: PipelineDAG, w: int, ports: int | dict[str, int] = 2,
                   var_of: dict[str, str] | None = None,
                   extra_accessors=None, prune: bool = True,
-                  mem_cfg: dict | None = None) -> ScheduleProblem:
+                  mem_cfg: dict | None = None,
+                  frame_h: int = 0) -> ScheduleProblem:
     """Assemble the schedule-synthesis problem.
 
     ``mem_cfg`` (stage -> MemConfig) routes buffers with a coalescing
     config to group-granularity constraints (paper Sec. 6); others use the
     standard per-line (P+1)-combination constraints (Sec. 5.3).
+
+    ``frame_h`` sizes the temporal frame rings ((st-1) full frames per
+    temporal producer) into the reported objective. Line-buffer port and
+    causality constraints see only the per-frame spatial window (st taps
+    of the same (sh, sw) pattern hit the frame store, not the line
+    buffer), so temporal edges add no schedule constraints.
     """
     var_of = dict(var_of or {})
     if mem_cfg is not None:
@@ -117,7 +142,8 @@ def build_problem(dag: PipelineDAG, w: int, ports: int | dict[str, int] = 2,
                      if not any((c.early, c.late, c.lines) in hard_set
                                 for c in g.candidates)]
     return ScheduleProblem(dag=dag, w=w, ports=ports, var_of=var_of,
-                           port_problem=pp, extra_causality=[])
+                           port_problem=pp, extra_causality=[],
+                           frame_h=frame_h)
 
 
 def _variables(prob: ScheduleProblem) -> list[str]:
@@ -255,11 +281,14 @@ def solve_schedule(prob: ScheduleProblem, objective: str = "exact") -> Schedule:
         raise ValueError(f"{prob.dag.name}: all {n_solved} branches infeasible")
     starts, lines, obj, enforced = best
     stage_starts = {s: starts[prob.var_of.get(s, s)] for s in prob.dag.topo_order}
+    frame_px = prob.frame_ring_pixels
     return Schedule(dag_name=prob.dag.name, w=prob.w, starts=stage_starts,
-                    buffer_lines=lines, total_pixels=int(obj),
+                    buffer_lines=lines, total_pixels=int(obj) + frame_px,
                     enforced=enforced, n_branches=n_solved,
                     solve_ms=(time.perf_counter() - t0) * 1e3,
-                    objective_mode=objective)
+                    objective_mode=objective,
+                    frame_depths=prob.dag.temporal_depths(),
+                    frame_pixels=frame_px)
 
 
 def brute_force_schedule(prob: ScheduleProblem, s_max: int) -> Schedule | None:
@@ -306,11 +335,15 @@ def brute_force_schedule(prob: ScheduleProblem, s_max: int) -> Schedule | None:
                       for e in dag.out_edges(p)
                       if not dag.stages[e.consumer].is_output]
             lines[p] = (max(deltas) // w) + 1  # corrected Eq. 2
-        obj = sum(lines[p] * w for p in owners)
+        # same constant frame-ring term as solve_schedule, so the two
+        # solvers' total_pixels stay directly comparable on temporal DAGs
+        obj = sum(lines[p] * w for p in owners) + prob.frame_ring_pixels
         if best is None or obj < best.total_pixels:
             best = Schedule(dag_name=dag.name, w=w,
                             starts={s: starts_v[var(s)] for s in dag.topo_order},
                             buffer_lines=lines, total_pixels=int(obj),
                             enforced=[], n_branches=0, solve_ms=0.0,
-                            objective_mode="brute")
+                            objective_mode="brute",
+                            frame_depths=dag.temporal_depths(),
+                            frame_pixels=prob.frame_ring_pixels)
     return best

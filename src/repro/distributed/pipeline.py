@@ -75,7 +75,11 @@ def pipeline_forward(params_stacked, x_micro, apply_fn, mesh,
         # stage+1 with ppermute.
         stage = jax.lax.axis_index(stage_axis)
         p = jax.tree.map(lambda a: a[0], params)
-        xs = jax.lax.pvary(xs, (stage_axis,))
+        # pvary marks xs device-varying under explicit sharding (jax >=
+        # 0.6); older jax has no varying types, so it's simply absent
+        pvary = getattr(jax.lax, "pvary", None)
+        if pvary is not None:
+            xs = pvary(xs, (stage_axis,))
         buf = jnp.zeros_like(xs[0])
         outs = jnp.zeros_like(xs)
 

@@ -76,7 +76,12 @@ class FrameEngine:
         after draining a step) — the backpressure contract. Malformed
         requests (unknown pipeline, wrong input names) raise here, at
         admission, so they can never poison an assembled batch."""
-        needed = set(self.cache.dag_for(req.pipeline).input_stages())
+        dag = self.cache.dag_for(req.pipeline)
+        if dag.is_temporal():
+            raise ValueError(
+                f"request {req.rid}: pipeline {req.pipeline!r} reads frame "
+                f"history; serve it through video.VideoEngine")
+        needed = set(dag.input_stages())
         if not needed <= set(req.frames):
             raise ValueError(
                 f"request {req.rid}: pipeline {req.pipeline!r} needs inputs "

@@ -16,7 +16,20 @@ mirroring the two compilation costs:
   * **executor level** — keyed by plan key + (height, batch): memoizes the
     traced + jitted Pallas callable. Height/batch are execution-shape
     parameters the plan itself is independent of (rings size by width
-    and row group only), so one plan fans out to many executors.
+    and row group only), so one plan fans out to many executors. Video
+    executors (frame-ring streaming, see kernels.make_video_executor)
+    share this level under a distinct key leg.
+
+Both levels are LRU-bounded (``max_plans`` / ``max_execs``): shape-
+diverse traffic — every distinct width is a new plan, every distinct
+height/batch/chunk a new executor — must recycle the oldest entry
+instead of growing without bound. The executor bound is the one that
+matters for memory (a jitted Pallas callable holds traced programs and
+device buffers; a plan is a few KB of metadata), the plan bound for
+ILP-solve amortization bookkeeping. Evicting a plan also cascades to
+the executors compiled from it (they hold the plan alive and are
+exactly as stale). Evictions bump ``stats.plan_evictions`` /
+``stats.exec_evictions``.
 
 Both levels report hit/miss/compile-time stats for the serving metrics.
 """
@@ -24,21 +37,26 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Callable, Mapping
 
 from repro.core import algorithms
 from repro.core.codegen import PipelinePlan, compile_pipeline, mem_cfg_key
 from repro.core.dag import PipelineDAG
 from repro.core.linebuffer import DP, MemConfig
-from repro.kernels.stencil_pipeline import StencilExecutor, make_executor
+from repro.kernels.stencil_pipeline import (StencilExecutor, VideoExecutor,
+                                            make_executor,
+                                            make_video_executor)
 
 
 @dataclasses.dataclass
 class CacheStats:
     plan_hits: int = 0
     plan_misses: int = 0
+    plan_evictions: int = 0
     exec_hits: int = 0
     exec_misses: int = 0
+    exec_evictions: int = 0
     plan_compile_s: float = 0.0
     exec_compile_s: float = 0.0
 
@@ -50,22 +68,35 @@ class PlanCache:
     """Long-lived compiled-artifact store for the frame-serving layer.
 
     ``pipelines`` maps name -> DAG factory (defaults to the paper's
-    Table-3 set). The DAG is built once per name and shared by every plan
-    and executor under that name — stage closures must be identical
-    objects for the jit caches downstream to cohere.
+    Table-3 set plus the temporal video pipelines). The DAG is built once
+    per name and shared by every plan and executor under that name —
+    stage closures must be identical objects for the jit caches
+    downstream to cohere. ``max_plans`` bounds the plan level with LRU
+    eviction; the default is generous (a plan is a few KB of schedule +
+    allocation metadata — the bound exists for shape-diverse traffic,
+    not for memory frugality under normal serving).
     """
 
     def __init__(self,
                  pipelines: Mapping[str, Callable[[], PipelineDAG]] | None = None,
                  mem: MemConfig | Mapping[str, MemConfig] = DP,
-                 interpret: bool = True):
+                 interpret: bool = True,
+                 max_plans: int = 256,
+                 max_execs: int = 256):
+        if max_plans < 1 or max_execs < 1:
+            raise ValueError(f"max_plans/max_execs must be >= 1, got "
+                             f"{max_plans}/{max_execs}")
         self._factories = dict(pipelines if pipelines is not None
-                               else algorithms.ALGORITHMS)
+                               else {**algorithms.ALGORITHMS,
+                                     **algorithms.VIDEO_ALGORITHMS})
         self._dags: dict[str, PipelineDAG] = {}
-        self._plans: dict[tuple, PipelinePlan] = {}
-        self._execs: dict[tuple, StencilExecutor] = {}
+        self._plans: OrderedDict[tuple, PipelinePlan] = OrderedDict()
+        self._execs: OrderedDict[tuple, StencilExecutor | VideoExecutor] = \
+            OrderedDict()
         self.default_mem = mem
         self.interpret = interpret
+        self.max_plans = max_plans
+        self.max_execs = max_execs
         self.stats = CacheStats()
 
     # ------------------------------------------------------------- lookups
@@ -77,6 +108,16 @@ class PlanCache:
             self._dags[name] = self._factories[name]()
         return self._dags[name]
 
+    def _evict_lru_plan(self) -> None:
+        key, _ = self._plans.popitem(last=False)
+        self.stats.plan_evictions += 1
+        # executors compiled from this plan identity are equally stale:
+        # exec keys embed the plan key's (name, w, mem, rows_per_step)
+        stale = [k for k in self._execs if k[:4] == key[:4]]
+        for k in stale:
+            del self._execs[k]
+        self.stats.exec_evictions += len(stale)
+
     def plan_for(self, name: str, w: int,
                  mem: MemConfig | Mapping[str, MemConfig] | None = None,
                  rows_per_step: int = 1) -> PipelinePlan:
@@ -85,6 +126,7 @@ class PlanCache:
         key = (name, w, mkey, rows_per_step)
         if key in self._plans:
             self.stats.plan_hits += 1
+            self._plans.move_to_end(key)
             return self._plans[key]
         self.stats.plan_misses += 1
         # the ILP/allocation do not depend on the row group: derive from a
@@ -98,18 +140,32 @@ class PlanCache:
             plan = compile_pipeline(self.dag_for(name), w, mem=mem,
                                     rows_per_step=rows_per_step)
         self.stats.plan_compile_s += time.perf_counter() - t0
+        while len(self._plans) >= self.max_plans:
+            self._evict_lru_plan()
         self._plans[key] = plan
         return plan
+
+    def _exec_key(self, name: str, w: int, mkey: tuple, rows_per_step: int,
+                  *legs) -> tuple:
+        # leading 4 fields == plan cache_key, so plan eviction can find us
+        return (name, w, mkey, rows_per_step) + legs + (self.interpret,)
+
+    def _store_exec(self, key: tuple, ex) -> None:
+        while len(self._execs) >= self.max_execs:
+            self._execs.popitem(last=False)
+            self.stats.exec_evictions += 1
+        self._execs[key] = ex
 
     def executor_for(self, name: str, h: int, w: int,
                      batch: int | None = None,
                      mem: MemConfig | Mapping[str, MemConfig] | None = None,
                      rows_per_step: int = 1) -> StencilExecutor:
         mem = self.default_mem if mem is None else mem
-        key = (name, w, mem_cfg_key(mem), h, batch, rows_per_step,
-               self.interpret)
+        key = self._exec_key(name, w, mem_cfg_key(mem), rows_per_step,
+                             "frame", h, batch)
         if key in self._execs:
             self.stats.exec_hits += 1
+            self._execs.move_to_end(key)
             return self._execs[key]
         plan = self.plan_for(name, w, mem=mem, rows_per_step=rows_per_step)
         self.stats.exec_misses += 1
@@ -117,7 +173,31 @@ class PlanCache:
         ex = make_executor(self.dag_for(name), h, w, batch=batch, plan=plan,
                            interpret=self.interpret)
         self.stats.exec_compile_s += time.perf_counter() - t0
-        self._execs[key] = ex
+        self._store_exec(key, ex)
+        return ex
+
+    def video_executor_for(self, name: str, h: int, w: int,
+                           chunk: int | None = None,
+                           mem: MemConfig | Mapping[str, MemConfig] | None = None,
+                           rows_per_step: int = 1) -> VideoExecutor:
+        """Streaming (frame-ring) executor — the video analogue of
+        :meth:`executor_for`. Also serves spatial DAGs (empty state), so
+        the VideoEngine can carry single-frame pipelines as degenerate
+        streams."""
+        mem = self.default_mem if mem is None else mem
+        key = self._exec_key(name, w, mem_cfg_key(mem), rows_per_step,
+                             "video", h, chunk)
+        if key in self._execs:
+            self.stats.exec_hits += 1
+            self._execs.move_to_end(key)
+            return self._execs[key]
+        plan = self.plan_for(name, w, mem=mem, rows_per_step=rows_per_step)
+        self.stats.exec_misses += 1
+        t0 = time.perf_counter()
+        ex = make_video_executor(self.dag_for(name), h, w, plan=plan,
+                                 interpret=self.interpret, chunk=chunk)
+        self.stats.exec_compile_s += time.perf_counter() - t0
+        self._store_exec(key, ex)
         return ex
 
     # ----------------------------------------------------------- accounting

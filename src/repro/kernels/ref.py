@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.algorithms import execute_reference
+from repro.core.algorithms import execute_reference, execute_reference_video
 from repro.core.dag import PipelineDAG
 
 
@@ -13,6 +13,13 @@ def stencil_pipeline_ref(dag: PipelineDAG,
     """Whole-image reference for the fused stencil pipeline kernel."""
     vals = execute_reference(dag, images)
     return vals[dag.output_stages()[0]]
+
+
+def video_pipeline_ref(dag: PipelineDAG,
+                       videos: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Whole-stream reference for temporal pipelines: {input: (T, H, W)}
+    -> (T, H, W), frames before t = 0 reading as zero (warm-up)."""
+    return execute_reference_video(dag, videos)
 
 
 def conv2d_ref(img: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:

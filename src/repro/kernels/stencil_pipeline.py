@@ -56,8 +56,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.codegen import PipelinePlan, row_group_rings
-from repro.core.dag import PipelineDAG
+from repro.core.codegen import (PipelinePlan, row_group_rings, tap_name,
+                                temporal_tap_rings, temporal_taps)
+from repro.core.dag import PipelineDAG, window_keys
 
 try:  # pltpu only resolves on TPU builds; interpret mode falls back to ANY
     from jax.experimental.pallas import tpu as pltpu
@@ -129,6 +130,28 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
     stage loop — slab ring reads with per-row top-of-frame masking,
     window assembly with same-producer key dedup, R-row ring writes — is
     identical and lives here exactly once.
+
+    Temporal pipelines add two kinds of operands around that same loop:
+
+      * **tap pseudo-inputs** — for every (producer, j frames back) tap
+        the DAG needs, a history frame streamed from the caller-held
+        frame ring. Each tap is handled exactly like an input stage: its
+        R-row block is written to a private VMEM tap ring, and consumers
+        assemble (st, R+sh-1, W) slabs by reading the producer's live
+        ring (tap 0) plus the tap rings — the row-group slab loader,
+        reused per temporal tap. Frames older than the stream start are
+        zeros in the frame ring, matching the reference's causal zero
+        padding along time.
+      * **frame outputs** — internal (non-input) temporal producers emit
+        their full frame alongside the pipeline output so the caller can
+        push it into the frame ring for the next call. Batched execution
+        is refused for those DAGs: batch slots would need frames the
+        same call is still computing.
+
+    The return contract is ``fn(images) -> out`` as before, except when
+    the DAG has internal temporal producers: then ``fn(images) ->
+    (out, {producer: frame})``. ``images`` must carry one entry per
+    input stage plus one per tap (keyed ``codegen.tap_name(p, j)``).
     """
     r = rows_per_step
     if r < 1:
@@ -138,23 +161,58 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
     rings = row_group_rings(dag, plan.alloc.buffers if plan else None, r)
     w_pad = _round_up(w, 128)
     ring_shapes = {p: (rr, w_pad) for p, rr in rings.items()}
+    taps = temporal_taps(dag)
+    for (p, j), rr in temporal_tap_rings(dag, r).items():
+        name = tap_name(p, j)
+        if name in dag.stages:
+            raise ValueError(f"stage name {name!r} collides with the "
+                             f"temporal tap naming scheme")
+        ring_shapes[name] = (rr, w_pad)
     vmem_bytes = sum(rr * c * 4 for (rr, c) in ring_shapes.values())
     ring_owners = list(ring_shapes)
     inputs = dag.input_stages()
+    feeds = inputs + [tap_name(p, j) for (p, j) in taps]
+    depths = dag.temporal_depths()
+    # internal temporal producers: their frames must round-trip through
+    # the caller's frame ring, so the kernel emits them as extra outputs
+    frame_outs = [p for p in dag.topo_order
+                  if depths.get(p, 1) > 1 and not dag.stages[p].is_input]
     out_stage = dag.output_stages()[0]
     # the stage the output stage reads (it streams 1x1 from it)
     final = dag.in_edges(out_stage)[0].producer
 
     batched = batch is not None
+    if batched and frame_outs:
+        raise ValueError(
+            f"{dag.name}: batched execution needs input-only temporal "
+            f"taps, but {sorted(frame_outs)} are internal temporal "
+            f"producers (frame t would need frame t-1 from the same call)")
     group_axis = 1 if batched else 0    # program_id axis walking row groups
     lead = (0,) if batched else ()      # block-local leading index
 
     def kernel(*refs):
-        in_refs = {name: refs[i] for i, name in enumerate(inputs)}
-        out_ref = refs[len(inputs)]
-        ring_refs = {p: refs[len(inputs) + 1 + i]
+        in_refs = {name: refs[i] for i, name in enumerate(feeds)}
+        out_ref = refs[len(feeds)]
+        frame_refs = {p: refs[len(feeds) + 1 + i]
+                      for i, p in enumerate(frame_outs)}
+        ring_refs = {p: refs[len(feeds) + 1 + len(frame_outs) + i]
                      for i, p in enumerate(ring_owners)}
         row0 = pl.program_id(group_axis) * r    # first row of this group
+
+        # stream the history taps into their rings first: consumers later
+        # in this same grid step read their slabs like any producer ring
+        for (p, j) in taps:
+            name = tap_name(p, j)
+            val = in_refs[name][lead + (slice(None), slice(0, w))]
+            rr = ring_shapes[name][0]
+            pl.store(ring_refs[name],
+                     (pl.dslice(jax.lax.rem(row0, rr), r),
+                      pl.dslice(0, w)), val)
+
+        def slab_windows(src: str, e) -> jnp.ndarray:
+            rr = ring_shapes[src][0]
+            slab = _stage_read(ring_refs[src], rr, row0, r, e.sh, w)
+            return _slab_windows(slab, r, e.sh, e.sw, w)
 
         for name in dag.topo_order:
             st = dag.stages[name]
@@ -167,16 +225,20 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
                 rr = ring_shapes[e.producer][0]
                 val = _stage_read(ring_refs[e.producer], rr, row0, r, 1, w)
             else:
+                ins = dag.in_edges(name)
                 wins = {}
-                seen = set()
-                for e in dag.in_edges(name):
-                    rr = ring_shapes[e.producer][0]
-                    slab = _stage_read(ring_refs[e.producer], rr, row0, r,
-                                       e.sh, w)
-                    key = (e.producer if e.producer not in seen
-                           else f"{e.producer}#{e.sh}x{e.sw}")
-                    seen.add(e.producer)
-                    wins[key] = _slab_windows(slab, r, e.sh, e.sw, w)
+                for key, e in zip(window_keys(ins), ins):
+                    if e.st == 1:
+                        wins[key] = slab_windows(e.producer, e)
+                    else:
+                        # (R, W, st, sh, sw): tap st-1-dt feeds temporal
+                        # index dt, so index st-1 is the current frame —
+                        # causal alignment, like the spatial axes
+                        wins[key] = jnp.stack(
+                            [slab_windows(
+                                e.producer if j == 0
+                                else tap_name(e.producer, j), e)
+                             for j in range(e.st - 1, -1, -1)], axis=2)
                 val = st.fn(wins)  # (R, W)
             if name in ring_refs:
                 rr = ring_shapes[name][0]
@@ -184,6 +246,8 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
                 slot = jax.lax.rem(row0, rr)
                 pl.store(ring_refs[name],
                          (pl.dslice(slot, r), pl.dslice(0, w)), val)
+            if name in frame_refs:
+                frame_refs[name][lead + (slice(None), slice(0, w))] = val
             if name == final:
                 out_ref[lead + (slice(None), slice(0, w))] = val
 
@@ -193,8 +257,10 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
     else:
         blk, index_map = (r, w_pad), (lambda g: (g, 0))
         grid, out_dims = (n_groups,), (h_pad, w_pad)
-    in_specs = [pl.BlockSpec(blk, index_map) for _ in inputs]
-    out_specs = pl.BlockSpec(blk, index_map)
+    in_specs = [pl.BlockSpec(blk, index_map) for _ in feeds]
+    n_outs = 1 + len(frame_outs)
+    out_specs = [pl.BlockSpec(blk, index_map)] * n_outs
+    out_shape = [jax.ShapeDtypeStruct(out_dims, jnp.float32)] * n_outs
     if _HAVE_PLTPU:
         scratch = [pltpu.VMEM(ring_shapes[p], jnp.float32)
                    for p in ring_owners]
@@ -207,22 +273,26 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
-        out_shape=jax.ShapeDtypeStruct(out_dims, jnp.float32),
+        out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
     )
 
     @jax.jit
-    def fn(images: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    def fn(images: dict[str, jnp.ndarray]):
         # pad rows to the row-group boundary and cols to the lane tile;
         # padding rows compute garbage that is cropped here and, being
         # below every real row, is never read back (windows are causal)
         padded = [jnp.pad(jnp.asarray(images[n], jnp.float32),
                           [(0, 0)] * (len(out_dims) - 2)
                           + [(0, h_pad - h), (0, w_pad - w)])
-                  for n in inputs]
-        out = call(*padded)
-        return out[..., :h, :w]
+                  for n in feeds]
+        outs = call(*padded)
+        out = outs[0][..., :h, :w]
+        if not frame_outs:
+            return out
+        return out, {p: outs[1 + i][..., :h, :w]
+                     for i, p in enumerate(frame_outs)}
 
     return fn, vmem_bytes
 
@@ -304,8 +374,124 @@ def make_executor(dag: PipelineDAG, h: int, w: int,
                   interpret: bool = True,
                   rows_per_step: int | None = None) -> StencilExecutor:
     """Executor factory: DAG + shape (+ optional plan) -> StencilExecutor."""
+    if dag.is_temporal():
+        raise ValueError(f"{dag.name} reads frame history; build it with "
+                         f"make_video_executor")
     r = _resolve_rows(rows_per_step, plan)
     fn, vmem = _build_pipeline_call(dag, h, w, plan, interpret, batch,
                                     rows_per_step=r)
     return StencilExecutor(dag=dag, h=h, w=w, batch=batch, rows_per_step=r,
                            vmem_bytes=vmem, interpret=interpret, _fn=fn)
+
+
+def init_frame_state(depths: dict[str, int], h: int,
+                     w: int) -> dict[str, jnp.ndarray]:
+    """Zero frame rings for a fresh stream: one (d-1, h, w) float32 ring
+    per temporal producer, newest frame first along axis 0. The single
+    definition of the state layout — the executor's concatenate/flip
+    rolls and the engine's sessions both build state through here."""
+    return {p: jnp.zeros((d - 1, h, w), jnp.float32)
+            for p, d in depths.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class VideoExecutor:
+    """A compiled frame-stream executor — stateless across streams.
+
+    The temporal analogue of :class:`StencilExecutor`: the jitted Pallas
+    call is compiled once and shared by every stream of the pipeline; all
+    per-stream state — the frame rings holding each temporal producer's
+    last ``d-1`` frames — is an explicit argument and result of
+    ``__call__``, so N concurrent streams multiplex over ONE executor
+    without cross-talk.
+
+    ``chunk=None`` advances one frame per call ({input: (h, w)} ->
+    (h, w)); ``chunk=B`` advances B *consecutive* frames of one stream
+    per call ({input: (B, h, w)} -> (B, h, w)) through the batched grid —
+    frame b's history taps are served from the time-shifted input
+    sequence itself, which is why chunking requires input-only temporal
+    taps (enforced at construction).
+    """
+    dag: PipelineDAG
+    h: int
+    w: int
+    chunk: int | None
+    rows_per_step: int
+    vmem_bytes: int                 # VMEM rings (spatial + tap)
+    frame_state_bytes: int          # device-resident frame-ring state
+    interpret: bool
+    depths: dict = dataclasses.field(repr=False)   # producer -> frames
+    _fn: "callable" = dataclasses.field(repr=False)
+
+    def init_state(self) -> dict[str, jnp.ndarray]:
+        """Zero frame rings — the stream-start (warm-up) state. Frames
+        read from the zero region reproduce the reference's causal zero
+        padding along time."""
+        return init_frame_state(self.depths, self.h, self.w)
+
+    def __call__(self, images: dict[str, jnp.ndarray],
+                 state: dict[str, jnp.ndarray]
+                 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+        return self._fn(images, state)
+
+    @property
+    def warmup_frames(self) -> int:
+        """Frames before the output stops depending on the zero history."""
+        return self.dag.cumulative_extent(temporal=True)[0]
+
+
+def make_video_executor(dag: PipelineDAG, h: int, w: int,
+                        plan: PipelinePlan | None = None,
+                        interpret: bool = True,
+                        rows_per_step: int | None = None,
+                        chunk: int | None = None) -> VideoExecutor:
+    """Build a streaming executor for a (possibly temporal) pipeline.
+
+    Wraps the fused Pallas call with the frame-ring plumbing: history
+    taps are sliced out of the caller's state (single-frame mode) or
+    time-shifted out of the input chunk itself (chunk mode), and the
+    returned state rolls the newest frames in. A DAG with no temporal
+    edges degenerates to the plain executor with empty state.
+    """
+    r = _resolve_rows(rows_per_step, plan)
+    depths = dag.temporal_depths()
+    inputs = set(dag.input_stages())
+    internal = sorted(p for p in depths if p not in inputs)
+    fn, vmem = _build_pipeline_call(dag, h, w, plan, interpret, batch=chunk,
+                                    rows_per_step=r)
+    taps = temporal_taps(dag)
+
+    @jax.jit
+    def step(images, state):
+        feed = {n: jnp.asarray(images[n], jnp.float32)
+                for n in dag.input_stages()}
+        for (p, j) in taps:
+            if chunk is None:
+                feed[tap_name(p, j)] = state[p][j - 1]
+            else:
+                # tap j of chunk frame b is stream frame t0+b-j: the
+                # first j frames come from the ring (newest-first, so
+                # flipped), the rest are the chunk itself shifted by j
+                feed[tap_name(p, j)] = jnp.concatenate(
+                    [jnp.flip(state[p][:j], axis=0), feed[p]],
+                    axis=0)[:chunk]
+        out = fn(feed)
+        frames = {}
+        if internal:
+            out, frames = out
+        new_state = {}
+        for p, d in depths.items():
+            if chunk is None:
+                cur = feed[p] if p in inputs else frames[p]
+                new_state[p] = jnp.concatenate(
+                    [cur[None], state[p]], axis=0)[:d - 1]
+            else:
+                new_state[p] = jnp.concatenate(
+                    [jnp.flip(feed[p], axis=0), state[p]], axis=0)[:d - 1]
+        return out, new_state
+
+    return VideoExecutor(dag=dag, h=h, w=w, chunk=chunk, rows_per_step=r,
+                         vmem_bytes=vmem,
+                         frame_state_bytes=sum((d - 1) * h * w * 4
+                                               for d in depths.values()),
+                         interpret=interpret, depths=dict(depths), _fn=step)

@@ -28,7 +28,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed import sharding as shd
-from repro.launch.mesh import TPU_V5E, make_production_mesh
+from repro.launch.mesh import TPU_V5E, make_production_mesh, mesh_scope
 from repro.launch.shapes import (SHAPES, cell_status, decode_input_specs,
                                  prefill_input_specs, train_input_specs)
 from repro.models import build_model, get_config
@@ -160,7 +160,7 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
     else:
         mctx = contextlib.nullcontext()
     t0 = time.time()
-    with jax.set_mesh(mesh), ctx, mctx:
+    with mesh_scope(mesh), ctx, mctx:
         return _lower_cell_inner(res, model, cfg, sh, kind, mesh, mesh_name,
                                  t0, verbose)
 
@@ -241,6 +241,8 @@ def _lower_cell_inner(res, model, cfg, sh, kind, mesh, mesh_name, t0,
         res.out_bytes = int(ma.output_size_in_bytes)
         res.temp_bytes = int(ma.temp_size_in_bytes)
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # pre-0.5 jax: one dict per program
+        ca = ca[0] if ca else {}
     res.flops_per_dev = float(ca.get("flops", 0.0))
     res.bytes_per_dev = float(ca.get("bytes accessed", 0.0))
     res.coll_bytes = collective_bytes(compiled.as_text())

@@ -1,0 +1,26 @@
+"""Temporal pipeline subsystem: frame rings, video DSL extents, streaming.
+
+One axis up from the imaging subsystem: where a line buffer holds the
+last few *rows* a spatial stencil needs, a frame ring holds the last few
+*frames* a temporal stencil needs — same compiler (core/), same fused
+Pallas executor (kernels/stencil_pipeline.py), same plan cache. This
+package adds the serving layer for streams:
+
+  * :class:`VideoEngine` — per-stream sessions (frame-ring state, warm-up
+    accounting, ordered delivery) multiplexed over shared compiled
+    executors, with bounded-FIFO backpressure per stream.
+  * re-exports of the executor-side pieces a video caller needs.
+
+The DSL side lives in core/: reads of the form ``(ref, st, sh, sw)``
+declare an st-frame temporal window (see core/dsl.py), and
+``core.algorithms.VIDEO_ALGORITHMS`` registers the evaluation pipelines.
+"""
+from repro.kernels.stencil_pipeline import VideoExecutor, make_video_executor
+
+from .engine import (CompletedVideoFrame, VideoEngine, VideoFrame,
+                     VideoSession)
+
+__all__ = [
+    "CompletedVideoFrame", "VideoEngine", "VideoExecutor", "VideoFrame",
+    "VideoSession", "make_video_executor",
+]

@@ -1,0 +1,228 @@
+"""VideoEngine: multiplexed streaming of temporal pipelines.
+
+The video analogue of imaging.FrameEngine — but where the frame engine
+treats every request as independent, a video stream is *stateful*: each
+temporal producer's last d-1 frames live in a device-resident frame ring
+that must follow the stream, frame order matters, and two streams of the
+same pipeline must never see each other's history. The engine therefore
+splits the world in two:
+
+  * **compiled artifacts are shared** — one VideoExecutor per (pipeline,
+    shape, chunk, row group) in the PlanCache, stateless across streams
+    (history is an explicit argument/result, see kernels.VideoExecutor);
+  * **state is per-session** — a VideoSession owns its frame rings, its
+    FIFO of pending frames (bounded: a full queue refuses, backpressure
+    to the caller), its delivery counter (outputs are emitted in
+    submission order), and its warm-up accounting.
+
+Warm-up semantics: a fresh session's frame rings are zeros, so the first
+``warmup_frames`` outputs (the DAG's cumulative temporal extent) are
+computed against zero history — valid, deterministic, bitwise equal to
+the multi-frame reference, but flagged ``warm=False`` so a caller who
+wants only fully-warmed output can drop them.
+
+``step()`` serves the session whose head frame waited longest, advancing
+up to ``chunk`` frames in one executor call when the pipeline's temporal
+taps are input-only (the common case; see make_video_executor), falling
+back to frame-at-a-time for pipelines with internal temporal producers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.imaging.metrics import EngineMetrics
+from repro.imaging.plan_cache import PlanCache
+from repro.imaging.tiling import rows_per_step_for_tile
+from repro.kernels.stencil_pipeline import init_frame_state
+from repro.serve.scheduling import BoundedFifo, RunningStat, assemble_batch
+
+
+@dataclasses.dataclass
+class VideoFrame:
+    """One submitted frame of one stream (inputs keyed by stage name)."""
+    stream: int
+    frames: Mapping[str, np.ndarray]
+    submitted_at: float = 0.0             # stamped by the engine
+
+
+@dataclasses.dataclass
+class CompletedVideoFrame:
+    stream: int
+    pipeline: str
+    index: int                            # position in the stream, from 0
+    output: jnp.ndarray
+    warm: bool                            # False while zero history shows
+    latency_s: float
+
+
+@dataclasses.dataclass
+class VideoSession:
+    """Per-stream serving state: the part that must NOT be shared."""
+    sid: int
+    pipeline: str
+    h: int
+    w: int
+    state: dict[str, jnp.ndarray]         # frame rings {producer: (d-1,h,w)}
+    queue: BoundedFifo
+    warmup_frames: int
+    inputs: frozenset                     # required input-stage names
+    submitted: int = 0
+    delivered: int = 0
+    opened_at: float = dataclasses.field(
+        default_factory=time.perf_counter)
+    first_warm_at: float | None = None
+
+
+class VideoEngine:
+    def __init__(self, cache: PlanCache | None = None,
+                 chunk: int = 4, max_pending: int = 64,
+                 rows_per_step: int = 8):
+        self.cache = cache if cache is not None else PlanCache()
+        self.chunk = chunk
+        self.max_pending = max_pending
+        self.rows_per_step = rows_per_step
+        self._sessions: dict[int, VideoSession] = {}
+        self._ids = itertools.count()
+        self.metrics = EngineMetrics()
+        self.warmup_latency_s = RunningStat()
+
+    # ------------------------------------------------------------- streams
+    def open_stream(self, pipeline: str, h: int, w: int) -> int:
+        """Create a session: zeroed frame rings, empty queue. Executors
+        compile lazily on the first step — opening a stream costs only
+        the zero-state allocation."""
+        dag = self.cache.dag_for(pipeline)
+        sid = next(self._ids)
+        self._sessions[sid] = VideoSession(
+            sid=sid, pipeline=pipeline, h=h, w=w,
+            state=init_frame_state(dag.temporal_depths(), h, w),
+            queue=BoundedFifo(self.max_pending),
+            warmup_frames=dag.cumulative_extent(temporal=True)[0],
+            inputs=frozenset(dag.input_stages()))
+        return sid
+
+    def close_stream(self, sid: int) -> None:
+        s = self._sessions[sid]
+        if s.queue:
+            raise ValueError(f"stream {sid} closed with {len(s.queue)} "
+                             f"undelivered frames")
+        del self._sessions[sid]
+
+    @property
+    def pending(self) -> int:
+        return sum(len(s.queue) for s in self._sessions.values())
+
+    # ----------------------------------------------------------- admission
+    def submit(self, frame: VideoFrame) -> bool:
+        """Enqueue one frame; False = stream saturated (backpressure).
+        Malformed frames raise here, at admission."""
+        s = self._sessions.get(frame.stream)
+        if s is None:
+            raise KeyError(f"unknown stream {frame.stream}")
+        if not s.inputs <= set(frame.frames):
+            raise ValueError(f"stream {s.sid}: pipeline {s.pipeline!r} "
+                             f"needs inputs {sorted(s.inputs)}, got "
+                             f"{sorted(frame.frames)}")
+        for n in s.inputs:
+            if tuple(np.shape(frame.frames[n])) != (s.h, s.w):
+                raise ValueError(
+                    f"stream {s.sid}: frame shape "
+                    f"{tuple(np.shape(frame.frames[n]))} != ({s.h}, {s.w})")
+        frame.submitted_at = time.perf_counter()
+        ok = s.queue.push(frame)
+        if ok:
+            s.submitted += 1
+            self.metrics.frames_submitted += 1
+        else:
+            self.metrics.frames_rejected += 1
+        return ok
+
+    # ----------------------------------------------------------------- step
+    def _executor(self, pipeline: str, h: int, w: int, n: int):
+        """Cached executor advancing ``n`` frames: the full-chunk batched
+        variant when the DAG supports it (input-only temporal taps) and
+        the batch is full, else single-frame. Partial chunks run frame-
+        at-a-time rather than compiling one executor per fill level —
+        at most two compiled variants ({1, chunk}) per pipeline/shape."""
+        rps = rows_per_step_for_tile(h, self.rows_per_step)
+        dag = self.cache.dag_for(pipeline)
+        inputs = set(dag.input_stages())
+        chunkable = all(p in inputs for p in dag.temporal_depths())
+        chunk = n if (n == self.chunk and n > 1 and chunkable) else None
+        return self.cache.video_executor_for(pipeline, h, w, chunk=chunk,
+                                             rows_per_step=rps)
+
+    def step(self) -> list[CompletedVideoFrame]:
+        """Serve up to ``chunk`` frames of the neediest stream; [] idle."""
+        live = {sid: s.queue for sid, s in self._sessions.items()}
+        sid, frames = assemble_batch(live, self.chunk,
+                                     age_of=lambda f: f.submitted_at)
+        if not frames:
+            return []
+        s = self._sessions[sid]
+        n = len(frames)
+        ex = self._executor(s.pipeline, s.h, s.w, n)
+        t0 = time.perf_counter()
+        if ex.chunk is not None:
+            ins = {name: jnp.stack([jnp.asarray(f.frames[name], jnp.float32)
+                                    for f in frames])
+                   for name in s.inputs}
+            out, s.state = ex(ins, s.state)
+            out.block_until_ready()
+            outs = [out[i] for i in range(n)]
+        else:
+            outs = []
+            for f in frames:
+                o, s.state = ex(f.frames, s.state)
+                outs.append(o)
+            outs[-1].block_until_ready()
+        dt = time.perf_counter() - t0
+        self.metrics.observe_batch(s.pipeline, n, self.chunk, dt,
+                                   ex.vmem_bytes + ex.frame_state_bytes,
+                                   rows_per_step=ex.rows_per_step)
+        done: list[CompletedVideoFrame] = []
+        now = time.perf_counter()
+        for f, out in zip(frames, outs):
+            idx = s.delivered
+            s.delivered += 1
+            warm = idx >= s.warmup_frames
+            if warm and s.first_warm_at is None:
+                s.first_warm_at = now
+                self.warmup_latency_s.observe(now - s.opened_at)
+            lat = now - f.submitted_at
+            self.metrics.observe_latency(lat)
+            done.append(CompletedVideoFrame(
+                stream=sid, pipeline=s.pipeline, index=idx, output=out,
+                warm=warm, latency_s=lat))
+        return done
+
+    def run(self, streams: Mapping[int, list[Mapping[str, np.ndarray]]]
+            ) -> dict[int, list[jnp.ndarray]]:
+        """Feed whole streams (respecting backpressure), drain to the end.
+        Returns outputs per stream in frame order. ``step()`` serves the
+        globally neediest stream, so frames already queued on sessions
+        *outside* ``streams`` may complete during the drain; they are
+        returned under their own stream id rather than dropped, and only
+        the requested streams' queues gate termination."""
+        pending = {sid: list(frames) for sid, frames in streams.items()}
+        results: dict[int, list] = {sid: [] for sid in streams}
+        while (any(pending.values())
+               or any(self._sessions[sid].queue for sid in streams)):
+            for sid, frames in pending.items():
+                while frames and self.submit(VideoFrame(sid, frames[0])):
+                    frames.pop(0)
+            for c in self.step():
+                results.setdefault(c.stream, []).append(c.output)
+        return results
+
+    def snapshot(self) -> dict:
+        snap = self.metrics.snapshot()
+        snap["warmup_latency"] = self.warmup_latency_s.snapshot()
+        snap["open_streams"] = len(self._sessions)
+        return snap

@@ -1,0 +1,130 @@
+"""Property tests for the DSL builder and the PipelineDAG IR.
+
+Three invariants the video work leans on, fuzzed rather than spot-checked:
+
+  * rejection — cycles (IR level; the builder itself cannot express one,
+    which is asserted too) and reads of undeclared refs;
+  * read-tuple round-trip — ``(ref, sh, sw)`` / ``(ref, st, sh, sw)``
+    parse to edges carrying exactly those extents, with st defaulting
+    to 1;
+  * extent accumulation — ``cumulative_extent`` equals the hop-wise sum
+    along a chain (per-axis, temporal included) and the branch-wise max
+    across a join, and the 2-tuple spatial form stays the projection of
+    the 3-tuple temporal form.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core.algorithms import identity_fn  # noqa: E402
+from repro.core.dag import Edge, PipelineDAG, Stage  # noqa: E402
+from repro.core.dsl import Pipeline, Ref  # noqa: E402
+
+# (st, sh, sw) of one chained read; small extents keep dag building fast
+read_spec = st.tuples(st.integers(1, 3), st.integers(1, 4), st.integers(1, 4))
+chain_spec = st.lists(read_spec, min_size=1, max_size=6)
+
+
+def build_chain(name: str, reads) -> PipelineDAG:
+    p = Pipeline(name)
+    prev = p.input("in")
+    for i, (t, sh, sw) in enumerate(reads):
+        prev = p.stage(f"s{i}", [(prev, t, sh, sw)], identity_fn)
+    p.output("out", [(prev, 1, 1)])
+    return p.build()
+
+
+@settings(max_examples=60, deadline=None)
+@given(chain_spec)
+def test_extent_roundtrip_chain(reads):
+    dag = build_chain("chain", reads)
+    back, up, left = dag.cumulative_extent(temporal=True)
+    assert back == sum(t - 1 for (t, _, _) in reads)
+    assert up == sum(sh - 1 for (_, sh, _) in reads)
+    assert left == sum(sw - 1 for (_, _, sw) in reads)
+    # the spatial 2-tuple is the projection of the temporal 3-tuple
+    assert dag.cumulative_extent() == (up, left)
+
+
+@settings(max_examples=60, deadline=None)
+@given(chain_spec)
+def test_read_tuples_roundtrip_to_edges(reads):
+    dag = build_chain("rt", reads)
+    chain = [e for e in dag.edges if e.consumer != "out"]
+    assert [(e.st, e.sh, e.sw) for e in chain] == list(reads)
+    # a 3-tuple read defaults to st=1: the output read above was one
+    out_e = [e for e in dag.edges if e.consumer == "out"]
+    assert [(e.st, e.sh, e.sw) for e in out_e] == [(1, 1, 1)]
+
+
+@settings(max_examples=40, deadline=None)
+@given(chain_spec, chain_spec)
+def test_extent_join_takes_max(reads_a, reads_b):
+    p = Pipeline("join")
+    x = p.input("in")
+    prev_a, prev_b = x, x
+    for i, (t, sh, sw) in enumerate(reads_a):
+        prev_a = p.stage(f"a{i}", [(prev_a, t, sh, sw)], identity_fn)
+    for i, (t, sh, sw) in enumerate(reads_b):
+        prev_b = p.stage(f"b{i}", [(prev_b, t, sh, sw)], identity_fn)
+    j = p.stage("join", [(prev_a, 1, 1), (prev_b, 1, 1)], identity_fn)
+    p.output("out", [(j, 1, 1)])
+    dag = p.build()
+    exp = tuple(max(sum(r[ax] - 1 for r in reads)
+                    for reads in (reads_a, reads_b))
+                for ax in range(3))
+    assert dag.cumulative_extent(temporal=True) == exp
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6))
+def test_cycle_rejected_in_ir(n):
+    """A ring of n stages must be refused by the IR's toposort."""
+    stages = ([Stage("in", None, is_input=True)]
+              + [Stage(f"s{i}", identity_fn) for i in range(n)]
+              + [Stage("out", None, is_output=True)])
+    edges = ([Edge("in", "s0", 1, 1)]
+             + [Edge(f"s{i}", f"s{i + 1}", 1, 1) for i in range(n - 1)]
+             + [Edge(f"s{n - 1}", "s0", 1, 1),        # closes the ring
+                Edge(f"s{n - 1}", "out", 1, 1)])
+    with pytest.raises(ValueError, match="cycle"):
+        PipelineDAG("cyc", stages, edges)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.text(alphabet="abcdefgh", min_size=1, max_size=8))
+def test_unknown_ref_rejected(name):
+    """The builder refuses reads of refs it never declared — which is
+    also why a *builder*-made pipeline cannot contain a cycle: a read
+    can only target an already-built stage."""
+    p = Pipeline("u")
+    p.input("in")
+    if name == "in":
+        name = "notin"
+    with pytest.raises(ValueError, match="unknown ref"):
+        p.stage("s", [(Ref(name), 1, 1)], identity_fn)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(-3, 0), st.integers(1, 3))
+def test_nonpositive_extents_rejected(bad, good):
+    with pytest.raises(ValueError):
+        Edge("a", "b", sh=good, sw=good, st=bad)
+    with pytest.raises(ValueError):
+        Edge("a", "b", sh=bad, sw=good)
+    with pytest.raises(ValueError):
+        Edge("a", "b", sh=good, sw=bad)
+
+
+def test_malformed_read_tuple_rejected():
+    p = Pipeline("m")
+    x = p.input("in")
+    with pytest.raises(ValueError, match="read must be"):
+        p.stage("s", [(x, 1)], identity_fn)
+    with pytest.raises(ValueError, match="read must be"):
+        p.stage("s2", [(x, 1, 1, 1, 1)], identity_fn)
+    with pytest.raises(TypeError, match="Ref"):
+        p.stage("s3", [("in", 1, 1)], identity_fn)

@@ -116,3 +116,60 @@ def test_plan_fingerprint_and_dict():
 def test_unknown_pipeline_raises():
     with pytest.raises(KeyError):
         PlanCache().plan_for("no-such-pipeline", 24)
+
+
+def test_plan_lru_eviction_bounds_cache():
+    """Shape-diverse traffic must recycle the oldest plan, not grow
+    without bound; executors compiled from an evicted plan go with it."""
+    cache = PlanCache(max_plans=2)
+    cache.executor_for("unsharp-m", 16, 24)           # plan A + exec
+    cache.plan_for("unsharp-m", 32)                   # plan B
+    assert len(cache) == 2 and cache.stats.plan_evictions == 0
+    cache.plan_for("unsharp-m", 40)                   # plan C evicts A
+    assert len(cache) == 2
+    assert cache.stats.plan_evictions == 1
+    assert not any(k[1] == 24 for k in cache._plans)  # A gone...
+    assert not any(k[1] == 24 for k in cache._execs)  # ...with its exec
+    # re-requesting A is a fresh miss (recompile), evicting B (LRU)
+    misses = cache.stats.plan_misses
+    cache.plan_for("unsharp-m", 24)
+    assert cache.stats.plan_misses == misses + 1
+    assert cache.stats.plan_evictions == 2
+    assert not any(k[1] == 32 for k in cache._plans)
+    assert "plan_evictions" in cache.stats.snapshot()
+
+
+def test_plan_lru_recency_updated_on_hit():
+    """A hit refreshes recency: the *least recently used* plan is
+    evicted, not the least recently inserted."""
+    cache = PlanCache(max_plans=2)
+    cache.plan_for("unsharp-m", 24)                   # A
+    cache.plan_for("unsharp-m", 32)                   # B
+    cache.plan_for("unsharp-m", 24)                   # hit A: B is LRU now
+    cache.plan_for("unsharp-m", 40)                   # evicts B, not A
+    assert any(k[1] == 24 for k in cache._plans)
+    assert not any(k[1] == 32 for k in cache._plans)
+
+
+def test_exec_lru_eviction_bounds_cache():
+    """The executor level — the expensive jitted artifacts — is bounded
+    too: height/batch-diverse traffic over one plan must recycle."""
+    cache = PlanCache(max_execs=2)
+    e16 = cache.executor_for("unsharp-m", 16, 24)
+    cache.executor_for("unsharp-m", 20, 24)
+    cache.executor_for("unsharp-m", 16, 24)      # hit: refresh recency
+    cache.executor_for("unsharp-m", 24, 24)      # evicts the h=20 exec
+    assert len(cache._execs) == 2
+    assert cache.stats.exec_evictions == 1
+    assert cache.executor_for("unsharp-m", 16, 24) is e16   # survived
+    misses = cache.stats.exec_misses
+    cache.executor_for("unsharp-m", 20, 24)      # fresh miss: recompile
+    assert cache.stats.exec_misses == misses + 1
+    assert len(cache) == 1                       # one plan throughout
+
+
+def test_max_plans_validation():
+    with pytest.raises(ValueError):
+        PlanCache(max_plans=0)
+    with pytest.raises(ValueError):
+        PlanCache(max_execs=0)

@@ -1,0 +1,237 @@
+"""Temporal pipelines: executor vs. multi-frame reference, engine behavior.
+
+Equality discipline follows tests/test_row_group.py: assert bitwise
+equality first, fall back to a bound of a few ULP *at the array's scale*
+— XLA contracts mul+add chains into FMAs differently per trace shape, so
+the kernel (traced at (R, W)) and the reference (traced at (H, W)) can
+differ by ~1 ULP absolute on contraction-sensitive stages (conv taps,
+``cur + 1.5*(cur - avg)``). Near-zero outputs make per-element ULP
+counts meaningless (1 ULP absolute near 0 is thousands of ULP relative),
+hence the scale-anchored bound; structural bugs (wrong tap order, stale
+frame ring, cross-stream leakage) are off by ~1e6x, not 1e-7 absolute.
+"""
+import numpy as np
+import pytest
+
+from repro.core import algorithms
+from repro.core.dsl import Pipeline
+from repro.imaging import FrameEngine, FrameRequest, PlanCache
+from repro.kernels import ref
+from repro.kernels.stencil_pipeline import (make_executor,
+                                            make_video_executor)
+from repro.video import VideoEngine, VideoFrame
+
+RNG = np.random.RandomState(11)
+VIDEO = sorted(algorithms.VIDEO_ALGORITHMS)
+# streams >= 3x the deepest temporal extent (tbackground-t: depth 8)
+T, H, W = 24, 13, 24
+
+
+@pytest.fixture(scope="module")
+def cache():
+    return PlanCache()
+
+
+def assert_video_equal(got, exp):
+    got, exp = np.asarray(got), np.asarray(exp)
+    assert got.shape == exp.shape
+    if (got == exp).all():
+        return
+    tol = 32 * np.spacing(np.abs(exp).max())   # a few ULP at array scale
+    np.testing.assert_allclose(got, exp, rtol=0, atol=tol)
+
+
+def run_stream(ex, vid):
+    """Drive a (T, H, W) stream through an executor, frame by frame or
+    chunk by chunk, from a fresh (zero) frame ring."""
+    state = ex.init_state()
+    outs = []
+    if ex.chunk is None:
+        for t in range(vid.shape[0]):
+            o, state = ex({"in": vid[t]}, state)
+            outs.append(np.asarray(o))
+        return np.stack(outs)
+    for t in range(0, vid.shape[0], ex.chunk):
+        o, state = ex({"in": vid[t:t + ex.chunk]}, state)
+        outs.append(np.asarray(o))
+    return np.concatenate(outs)
+
+
+@pytest.mark.parametrize("name", VIDEO)
+@pytest.mark.parametrize("rows", [1, 8])
+def test_stream_matches_reference(cache, name, rows):
+    """Sequential frame-ring execution vs. the multi-frame oracle, at
+    R in {1, 8} (h % 8 != 0 so the last row group is partial)."""
+    vid = RNG.rand(T, H, W).astype(np.float32)
+    dag = cache.dag_for(name)
+    exp = ref.video_pipeline_ref(dag, {"in": vid})
+    ex = cache.video_executor_for(name, H, W, rows_per_step=rows)
+    assert_video_equal(run_stream(ex, vid), exp)
+
+
+@pytest.mark.parametrize("name", VIDEO)
+def test_chunked_stream_matches_reference(cache, name):
+    """Time-chunk batched execution: 4 consecutive frames per Pallas
+    call, history taps served from the shifted chunk itself."""
+    vid = RNG.rand(T, H, W).astype(np.float32)
+    dag = cache.dag_for(name)
+    exp = ref.video_pipeline_ref(dag, {"in": vid})
+    ex = cache.video_executor_for(name, H, W, chunk=4, rows_per_step=8)
+    assert_video_equal(run_stream(ex, vid), exp)
+
+
+def test_warmup_equals_zero_history(cache):
+    """The first frames compute against zero frame rings — bitwise the
+    same as a reference stream zero-padded before t=0, and NOT the same
+    as a stream that actually had earlier frames."""
+    name = "tbackground-t"
+    vid = RNG.rand(T, H, W).astype(np.float32)
+    dag = cache.dag_for(name)
+    ex = cache.video_executor_for(name, H, W, rows_per_step=8)
+    got = run_stream(ex, vid)
+    exp = np.asarray(ref.video_pipeline_ref(dag, {"in": vid}))
+    assert_video_equal(got, exp)
+    # tail of a longer stream != fresh stream on the same frames: the
+    # frame ring genuinely carries history across calls
+    longer = np.concatenate([RNG.rand(8, H, W).astype(np.float32), vid])
+    exp_tail = np.asarray(ref.video_pipeline_ref(dag, {"in": longer}))[8:]
+    assert np.abs(exp_tail[0] - got[0]).max() > 1e-3
+
+
+def test_internal_temporal_producer_sequential(cache):
+    """Temporal taps on a *computed* stage: its frames round-trip
+    through the executor's extra outputs into the frame ring."""
+    p = Pipeline("tinternal")
+    x = p.input("in")
+    b = p.stage("blur", [(x, 3, 3)], algorithms.conv_fn(algorithms.G3))
+    d = p.stage("diff", [(b, 2, 1, 1)], algorithms.frame_diff_fn)
+    p.output("out", [(d, 1, 1)])
+    dag = p.build()
+    vid = RNG.rand(9, H, W).astype(np.float32)
+    exp = ref.video_pipeline_ref(dag, {"in": vid})
+    for rows in (1, 8):
+        ex = make_video_executor(dag, H, W, rows_per_step=rows)
+        assert_video_equal(run_stream(ex, vid), exp)
+    # and chunking such a pipeline is a loud, early error
+    with pytest.raises(ValueError, match="input-only temporal taps"):
+        make_video_executor(dag, H, W, chunk=4)
+
+
+def test_frame_ring_accounting(cache):
+    """The ILP's frame-ring term: constant, schedule-independent, equal
+    between the MILP and brute-force solvers, and reflected in the
+    plan's per-height VMEM accounting."""
+    from repro.core.codegen import compile_pipeline
+    from repro.core.ilp import build_problem, solve_schedule
+    dag = cache.dag_for("tbackground-t")        # depth 8 on the input
+    plan0 = compile_pipeline(dag, 24)            # frame_h defaulted: 0
+    plan = compile_pipeline(dag, 24, frame_h=32)
+    # (8 - 1) frames of 32x24 pixels, on top of the same line buffers
+    assert plan.schedule.frame_depths == {"in": 8}
+    assert plan.schedule.frame_pixels == 7 * 32 * 24
+    assert plan.schedule.total_pixels == \
+        plan0.schedule.total_pixels + 7 * 32 * 24
+    assert plan.schedule.buffer_lines == plan0.schedule.buffer_lines
+    assert plan.vmem_frame_bytes(32) == 7 * 32 * 24 * 4
+    # spatial pipelines are untouched by the accounting
+    prob = build_problem(cache.dag_for("unsharp-m"), 24, frame_h=32)
+    assert solve_schedule(prob).frame_pixels == 0
+
+
+def test_spatial_dag_degenerates(cache):
+    """A video executor over a spatial pipeline: empty state, output
+    identical to the plain executor."""
+    ex = cache.video_executor_for("unsharp-m", H, W, rows_per_step=8)
+    assert ex.init_state() == {}
+    img = RNG.rand(H, W).astype(np.float32)
+    out, state = ex({"in": img}, {})
+    exp = cache.executor_for("unsharp-m", H, W, rows_per_step=8)({"in": img})
+    assert (np.asarray(out) == np.asarray(exp)).all()
+    assert state == {}
+
+
+def test_temporal_pipeline_refused_by_spatial_paths(cache):
+    dag = cache.dag_for("tmotion-t")
+    with pytest.raises(ValueError, match="make_video_executor"):
+        make_executor(dag, H, W)
+    eng = FrameEngine(cache=cache)
+    with pytest.raises(ValueError, match="VideoEngine"):
+        eng.submit(FrameRequest(rid=0, pipeline="tmotion-t",
+                                frames={"in": RNG.rand(H, W)}))
+
+
+# ---------------------------------------------------------------- engine
+def test_engine_interleaved_streams_no_leakage(cache):
+    """Two concurrent streams of one pipeline share every compiled
+    artifact but never each other's frame rings: each must match its own
+    full-stream reference bitwise(-ish), with ordered delivery."""
+    eng = VideoEngine(cache=cache, chunk=4)
+    dag = cache.dag_for("tdenoise-t")
+    vids = [RNG.rand(T, H, W).astype(np.float32) for _ in range(2)]
+    sids = [eng.open_stream("tdenoise-t", H, W) for _ in range(2)]
+    outs = {sid: [] for sid in sids}
+    fed = {sid: 0 for sid in sids}
+    while any(fed[s] < T for s in sids) or eng.pending:
+        for sid, vid in zip(sids, vids):
+            if fed[sid] < T and eng.submit(VideoFrame(sid, {"in": vid[fed[sid]]})):
+                fed[sid] += 1
+        for c in eng.step():
+            outs[c.stream].append(c)
+    for sid, vid in zip(sids, vids):
+        assert [c.index for c in outs[sid]] == list(range(T))
+        exp = ref.video_pipeline_ref(dag, {"in": vid})
+        assert_video_equal(np.stack([np.asarray(c.output)
+                                     for c in outs[sid]]), exp)
+        warm_from = dag.cumulative_extent(temporal=True)[0]
+        assert [c.warm for c in outs[sid]] == \
+            [i >= warm_from for i in range(T)]
+    for sid in sids:
+        eng.close_stream(sid)
+    assert eng.snapshot()["open_streams"] == 0
+
+
+def test_engine_backpressure_and_admission(cache):
+    eng = VideoEngine(cache=cache, chunk=2, max_pending=2)
+    sid = eng.open_stream("tmotion-t", H, W)
+    f = lambda: VideoFrame(sid, {"in": RNG.rand(H, W).astype(np.float32)})
+    assert eng.submit(f()) and eng.submit(f())
+    assert not eng.submit(f())                     # full queue refuses
+    assert eng.metrics.frames_rejected == 1
+    with pytest.raises(KeyError):
+        eng.submit(VideoFrame(sid + 99, {"in": np.zeros((H, W))}))
+    with pytest.raises(ValueError, match="needs inputs"):
+        eng.submit(VideoFrame(sid, {"wrong": np.zeros((H, W))}))
+    with pytest.raises(ValueError, match="frame shape"):
+        eng.submit(VideoFrame(sid, {"in": np.zeros((H + 1, W))}))
+    done = eng.step()
+    assert len(done) == 2 and [c.index for c in done] == [0, 1]
+    assert eng.submit(f())
+    with pytest.raises(ValueError, match="undelivered"):
+        eng.close_stream(sid)                      # refuses, keeps session
+    assert len(eng.step()) == 1
+    eng.close_stream(sid)                          # drained: closes clean
+
+
+def test_engine_run_convenience(cache):
+    eng = VideoEngine(cache=cache, chunk=4)
+    dag = cache.dag_for("tunsharp-t")
+    vid = RNG.rand(12, H, W).astype(np.float32)
+    sid = eng.open_stream("tunsharp-t", H, W)
+    res = eng.run({sid: [{"in": f} for f in vid]})
+    exp = ref.video_pipeline_ref(dag, {"in": vid})
+    assert_video_equal(np.stack([np.asarray(o) for o in res[sid]]), exp)
+
+
+def test_engine_run_with_foreign_stream_pending(cache):
+    """run() must not crash on — or swallow — frames of a stream it was
+    not asked to drain: foreign completions come back under their own
+    stream id, and the foreign stream keeps its ordered indices."""
+    eng = VideoEngine(cache=cache, chunk=2)
+    other = eng.open_stream("tmotion-t", H, W)
+    mine = eng.open_stream("tmotion-t", H, W)
+    eng.submit(VideoFrame(other, {"in": RNG.rand(H, W).astype(np.float32)}))
+    vid = RNG.rand(4, H, W).astype(np.float32)
+    res = eng.run({mine: [{"in": f} for f in vid]})
+    assert len(res[mine]) == 4
+    assert len(res.get(other, [])) == 1
+    eng.close_stream(other)                      # drained by the run
