@@ -1,0 +1,227 @@
+"""Memory-config autotuning sweep: default vs autotuned serving configs.
+
+    PYTHONPATH=src python benchmarks/tune_sweep.py
+    PYTHONPATH=src python benchmarks/tune_sweep.py \
+        --pipelines unsharp-m tbackground-t --widths 48 96
+    PYTHONPATH=src python benchmarks/tune_sweep.py --smoke   # CI gate
+
+For every registered pipeline (image AND video) and width, the cache
+runs one design-space search (core.dse.autotune via PlanCache.tune) and
+the sweep compares the serving default (uniform DP) against the winner,
+written to ``BENCH_tune.json``:
+
+  * **memory** — VMEM ring bytes of the Pallas embodiment, allocated
+    SRAM bits, modeled power/area, the winning per-stage combo, and the
+    Pareto frontier {vmem bytes, power, contention slack};
+  * **fps** — steady-state frames/sec through the compiled executor,
+    default vs tuned (the tuner must not tax the hot path: both run the
+    same fused kernel, differing only in ring sizing);
+  * **correctness** — tuned output vs the default executor (3 ULP at
+    array scale: any drift here is tuner-attributable ring-shape FMA
+    wobble) and vs the pure-jnp oracle (32 ULP at scale, the documented
+    fused-kernel contraction wobble the default pays identically).
+
+``--smoke`` is the CI gate: three pipelines at one small shape; exit
+nonzero if any tuned plan allocates MORE VMEM than the default, or any
+correctness bound is exceeded. Throughput is reported, never gated
+(shared-runner timing noise).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import zlib
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import algorithms  # noqa: E402
+from repro.imaging import PlanCache  # noqa: E402
+from repro.imaging.tiling import rows_per_step_for_tile  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+
+DEFAULT_PIPELINES = (sorted(algorithms.ALGORITHMS)
+                     + sorted(algorithms.VIDEO_ALGORITHMS))
+SCHEMA = "bench_tune/v1"
+TUNE_DRIFT_ULP = 3    # tuned vs default executor, at array scale
+WOBBLE_ULP = 32       # executor vs pure-jnp oracle (FMA contraction)
+
+
+def _scale_ulp(got: np.ndarray, exp: np.ndarray) -> float:
+    """Max |got-exp| as a multiple of the float32 spacing at the
+    reference's scale; 0.0 when bitwise equal."""
+    if (got == exp).all():
+        return 0.0
+    err = np.abs(got - exp).max()
+    return float(err / np.spacing(np.abs(exp).max()))
+
+
+def _plan_metrics(plan) -> dict:
+    return {"vmem_bytes": plan.vmem_ring_bytes,
+            "alloc_bits": plan.total_alloc_bits,
+            "power": plan.power, "area": plan.area,
+            "mem_cfg": {s: c.name for s, c in plan.mem_cfg.items()}}
+
+
+def _run_spatial(cache: PlanCache, name: str, h: int, w: int, frames: int,
+                 rps: int, rng, tune: bool):
+    ex = cache.executor_for(name, h, w, rows_per_step=rps, tune=tune)
+    stream = [rng.rand(h, w).astype(np.float32) for _ in range(frames)]
+    out = ex({"in": stream[0]})
+    out.block_until_ready()                  # compile outside the clock
+    t0 = time.perf_counter()
+    for fr in stream:
+        out = ex({"in": fr})
+        out.block_until_ready()
+    return np.asarray(out), frames / (time.perf_counter() - t0), stream[-1]
+
+
+def _run_video(cache: PlanCache, name: str, h: int, w: int, frames: int,
+               rps: int, rng, tune: bool):
+    ex = cache.video_executor_for(name, h, w, rows_per_step=rps, tune=tune)
+    vid = rng.rand(frames, h, w).astype(np.float32)
+    state = ex.init_state()
+    out, state2 = ex({"in": vid[0]}, state)  # compile outside the clock
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    outs = []
+    for t in range(frames):
+        out, state = ex({"in": vid[t]}, state)
+        outs.append(out)
+    outs[-1].block_until_ready()
+    return (np.stack([np.asarray(o) for o in outs]),
+            frames / (time.perf_counter() - t0), vid)
+
+
+def bench_cell(cache: PlanCache, name: str, h: int, w: int,
+               frames: int) -> dict:
+    dag = cache.dag_for(name)
+    temporal = dag.is_temporal()
+    rps = rows_per_step_for_tile(h)
+    run = _run_video if temporal else _run_spatial
+    # identical frame streams for both configs, reproducible across
+    # processes (python's str hash is salted per run; crc32 is not)
+    seed = zlib.crc32(f"{name}:{h}:{w}".encode())
+    out_d, fps_d, probe = run(cache, name, h, w, frames, rps,
+                              np.random.RandomState(seed), tune=False)
+    out_t, fps_t, _ = run(cache, name, h, w, frames, rps,
+                          np.random.RandomState(seed), tune=True)
+
+    tuning = cache.tuning_for(name, w)
+    plan_d = cache.plan_for(name, w, rows_per_step=rps)
+    plan_t = cache.plan_for(name, w, rows_per_step=rps, tune=True)
+
+    if temporal:
+        exp = np.asarray(ref.video_pipeline_ref(dag, {"in": probe}))
+    else:
+        exp = np.asarray(ref.stencil_pipeline_ref(dag, {"in": probe}))
+    return {
+        "pipeline": name, "h": h, "w": w, "frames": frames,
+        "temporal": temporal, "rows_per_step": rps,
+        "default": _plan_metrics(plan_d) | {"fps": fps_d},
+        "tuned": _plan_metrics(plan_t) | {
+            "fps": fps_t, "combo": tuning.best.combo,
+            "contention_slack": tuning.best.contention_slack},
+        "vmem_ratio": plan_t.vmem_ring_bytes / plan_d.vmem_ring_bytes,
+        "power_ratio": plan_t.power / plan_d.power,
+        "alloc_ratio": plan_t.total_alloc_bits / plan_d.total_alloc_bits,
+        "pareto": [c.to_dict() for c in tuning.pareto()],
+        "n_candidates": len(tuning.candidates),
+        "tune_s": tuning.stats.tune_s,
+        "space_size": tuning.stats.space_size,
+        "tuned_vs_default_ulp": _scale_ulp(out_t, out_d),
+        "scale_ulp_vs_ref": _scale_ulp(out_t, exp),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pipelines", nargs="+", default=DEFAULT_PIPELINES,
+                    choices=DEFAULT_PIPELINES)
+    ap.add_argument("--widths", nargs="+", type=int, default=[48, 96])
+    ap.add_argument("--height", type=int, default=64)
+    ap.add_argument("--frames", type=int, default=24)
+    ap.add_argument("--max-candidates", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: tiny sweep, fail on vmem regression "
+                         "or correctness drift")
+    ap.add_argument("--out", default="BENCH_tune.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.pipelines = ["unsharp-m", "canny-m", "tmotion-t"]
+        args.widths, args.height, args.frames = [48], 32, 8
+
+    cache = PlanCache(tune_max_candidates=args.max_candidates)
+    cells = []
+    print(f"{'pipeline':>14} {'w':>5} {'vmem d->t':>15} {'power d->t':>15} "
+          f"{'fps d':>8} {'fps t':>8} {'tune s':>7} {'vs ref':>8}")
+    for name in args.pipelines:
+        for w in args.widths:
+            c = bench_cell(cache, name, args.height, w, args.frames)
+            cells.append(c)
+            print(f"{c['pipeline']:>14} {c['w']:>5} "
+                  f"{c['default']['vmem_bytes']:>7}->{c['tuned']['vmem_bytes']:<7} "
+                  f"{c['default']['power']:>7.2f}->{c['tuned']['power']:<7.2f} "
+                  f"{c['default']['fps']:>8.1f} {c['tuned']['fps']:>8.1f} "
+                  f"{c['tune_s']:>7.2f} "
+                  f"{c['scale_ulp_vs_ref']:>6.0f}ulp")
+
+    summary = {
+        "geomean_power_ratio": float(np.exp(np.mean(
+            np.log([c["power_ratio"] for c in cells])))),
+        "geomean_alloc_ratio": float(np.exp(np.mean(
+            np.log([c["alloc_ratio"] for c in cells])))),
+        "worst_vmem_ratio": max(c["vmem_ratio"] for c in cells),
+        "worst_tuned_vs_default_ulp": max(c["tuned_vs_default_ulp"]
+                                          for c in cells),
+        "worst_scale_ulp_vs_ref": max(c["scale_ulp_vs_ref"] for c in cells),
+        "total_tune_s": sum(c["tune_s"] for c in cells),
+    }
+    report = {"schema": SCHEMA,
+              "config": {"pipelines": args.pipelines, "widths": args.widths,
+                         "height": args.height, "frames": args.frames,
+                         "max_candidates": args.max_candidates,
+                         "smoke": args.smoke},
+              "cells": cells, "summary": summary}
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {args.out}")
+
+    print(f"summary: power x{summary['geomean_power_ratio']:.3f} "
+          f"alloc x{summary['geomean_alloc_ratio']:.3f} "
+          f"worst vmem ratio {summary['worst_vmem_ratio']:.3f} "
+          f"worst drift {summary['worst_scale_ulp_vs_ref']:.0f} ULP")
+
+    failures = []
+    for c in cells:
+        tag = f"{c['pipeline']}@w={c['w']}"
+        if c["tuned"]["vmem_bytes"] > c["default"]["vmem_bytes"]:
+            failures.append(f"{tag}: tuned plan uses MORE VMEM "
+                            f"({c['tuned']['vmem_bytes']} > "
+                            f"{c['default']['vmem_bytes']} B)")
+        if c["tuned_vs_default_ulp"] > TUNE_DRIFT_ULP:
+            failures.append(f"{tag}: tuned output drifted "
+                            f"{c['tuned_vs_default_ulp']:.0f} ULP from the "
+                            f"default executor (bound {TUNE_DRIFT_ULP})")
+        if c["scale_ulp_vs_ref"] > WOBBLE_ULP:
+            failures.append(f"{tag}: tuned output drifted "
+                            f"{c['scale_ulp_vs_ref']:.0f} ULP from the "
+                            f"oracle (bound {WOBBLE_ULP})")
+    if failures:
+        print("FAIL:\n  " + "\n  ".join(failures))
+        return 1
+    if args.smoke:
+        print("smoke ok: every tuned plan <= default VMEM, outputs within "
+              "drift bounds")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,12 +14,16 @@ from .codegen import PipelinePlan, compile_pipeline
 from .dag import Edge, PipelineDAG, Stage
 from .dsl import Pipeline
 from .ilp import Schedule, build_problem, solve_schedule
-from .linebuffer import DP, DPLC, FPGA_DP, FPGA_DPLC, FPGA_SP, SP, MemConfig
+from .dse import TuningResult, autotune
+from .linebuffer import DP, DPLC, FPGA_DP, FPGA_DPLC, FPGA_SP, QP, SP, \
+    MemConfig
 
 __all__ = [
     "algorithms", "baselines", "coalescing", "codegen", "contention",
     "dag", "dse", "dsl", "ilp", "linebuffer", "power", "pruning",
     "simulate", "PipelinePlan", "compile_pipeline", "Edge", "PipelineDAG",
     "Stage", "Pipeline", "Schedule", "build_problem", "solve_schedule",
-    "DP", "DPLC", "FPGA_DP", "FPGA_DPLC", "FPGA_SP", "SP", "MemConfig",
+    "autotune", "TuningResult",
+    "DP", "DPLC", "FPGA_DP", "FPGA_DPLC", "FPGA_SP", "QP", "SP",
+    "MemConfig",
 ]

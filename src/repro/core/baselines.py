@@ -29,6 +29,13 @@ def darkroom_linearize(dag: PipelineDAG) -> tuple[PipelineDAG, dict[str, str]]:
 
     Returns the rewritten DAG and the var ties (relay -> shadowed
     consumer's schedule variable).
+
+    Temporal out-edges (st > 1) are left attached to their producer: the
+    history taps stream from the frame store, not the line buffer (see
+    ilp.build_problem), so routing them through a relay would both be
+    acausal (a relay holds no frames) and silently drop the temporal
+    extent. Only the spatial consumer patterns are linearized — which is
+    all the line-buffer contention model ever sees.
     """
     stages = {n: s for n, s in dag.stages.items()}
     edges = list(dag.edges)
@@ -38,7 +45,7 @@ def darkroom_linearize(dag: PipelineDAG) -> tuple[PipelineDAG, dict[str, str]]:
         # relay chain must follow the consumers' topological order — the
         # relay shadowing consumer c feeds only stages downstream of c
         # (sorting by stencil size alone can create an acausal rewiring).
-        outs = sorted(dag.out_edges(p),
+        outs = sorted((e for e in dag.out_edges(p) if e.st == 1),
                       key=lambda e: (topo_pos[e.consumer], e.sh, e.sw))
         if len(outs) <= 1:
             continue
@@ -66,9 +73,19 @@ def darkroom_linearize(dag: PipelineDAG) -> tuple[PipelineDAG, dict[str, str]]:
     return new_dag, var_of
 
 
-def darkroom_schedule(dag: PipelineDAG, w: int) -> tuple[PipelineDAG, Schedule]:
+def darkroom_schedule(dag: PipelineDAG, w: int, frame_h: int = 0,
+                      mem_cfg: dict[str, MemConfig] | None = None
+                      ) -> tuple[PipelineDAG, Schedule]:
+    """Schedule the linearized DAG. ``frame_h`` folds the (unchanged by
+    linearization) temporal frame-ring pixels into the reported objective;
+    ``mem_cfg`` maps *original* stages to memory configs — relays are not
+    in it and default to dual-port, Darkroom's Tbl. 1 characterization."""
     lin, ties = darkroom_linearize(dag)
-    prob = build_problem(lin, w, ports=2, var_of=ties)
+    if mem_cfg is not None:
+        prob = build_problem(lin, w, mem_cfg=dict(mem_cfg), var_of=ties,
+                             frame_h=frame_h)
+    else:
+        prob = build_problem(lin, w, ports=2, var_of=ties, frame_h=frame_h)
     return lin, solve_schedule(prob)
 
 
@@ -78,17 +95,22 @@ class SodaDesign:
     alloc: Allocation
     dff_pixels: int            # head-line pixels held in registers
     latency_start: dict[str, int]
+    frame_pixels: int = 0      # temporal frame-ring pixels (frame_h given)
 
 
 def soda_allocate(dag: PipelineDAG, w: int, block_bits: int,
-                  pixel_bits: int = 32, sized: bool = True) -> SodaDesign:
+                  pixel_bits: int = 32, sized: bool = True,
+                  frame_h: int = 0) -> SodaDesign:
     """Analytic SODA sizing: per consumer reuse chains as split FIFOs.
 
     For a buffer with consumer stencil heights sh_c and widths sw_c, the
     reuse chain holds (max_sh - 1) * W + max_sw pixels; the partial head
     (max_sw) is DFFs. Tap points of the remaining consumers split the
     full lines into separate FIFO blocks (Fig. 4b). Every block serves
-    2 accesses/cycle (fifo_mode).
+    2 accesses/cycle (fifo_mode). ``frame_h`` reports the temporal
+    frame-ring pixels ((st-1) full frames per temporal producer) —
+    identical for every baseline, counted for comparability with the
+    post-PR-3 ilp.Schedule objective.
     """
     buffers: dict[str, BufferAlloc] = {}
     dff = 0
@@ -135,11 +157,14 @@ def soda_allocate(dag: PipelineDAG, w: int, block_bits: int,
             starts[e.producer] + causality_delay(e.sh, w) for e in ins)
     alloc = Allocation(dag_name=dag.name + "+soda", w=w, buffers=buffers,
                        fifo_mode=True)
-    return SodaDesign(alloc=alloc, dff_pixels=dff, latency_start=starts)
+    frame_px = sum((d - 1) * frame_h * w
+                   for d in dag.temporal_depths().values())
+    return SodaDesign(alloc=alloc, dff_pixels=dff, latency_start=starts,
+                      frame_pixels=frame_px)
 
 
 # ---------------------------------------------------------------- FixyNN
-def fixynn_schedule(dag: PipelineDAG, w: int) -> Schedule:
+def fixynn_schedule(dag: PipelineDAG, w: int, frame_h: int = 0) -> Schedule:
     """Single-port schedule: P=1 everywhere (no coalescing possible)."""
-    prob = build_problem(dag, w, ports=1)
+    prob = build_problem(dag, w, ports=1, frame_h=frame_h)
     return solve_schedule(prob)

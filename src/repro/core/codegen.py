@@ -43,6 +43,19 @@ def mem_cfg_key(mem: MemConfig | Mapping[str, MemConfig]) -> tuple:
         (s, dataclasses.astuple(c)) for s, c in mem.items())))
 
 
+def probe_height(dag: PipelineDAG, alloc: Allocation) -> int:
+    """Simulator probe height covering every ring's full wrap behavior:
+    three wraps of the tallest ring plus stencil reach. The single
+    definition — compile_pipeline's padding loop and the autotuner's
+    contention-slack scoring (dse.py) must probe at the same height or
+    the tuner would score on a simulation the compiler never validated.
+    """
+    max_n = max((b.n_lines_phys for b in alloc.buffers.values()),
+                default=1)
+    max_sh = max((e.sh for e in dag.edges), default=1)
+    return 3 * (max_n + max_sh) + 4
+
+
 def row_group_rings(dag: PipelineDAG, alloc_buffers: Mapping | None,
                     rows_per_step: int) -> dict[str, int]:
     """Physical VMEM ring rows per buffer owner for row-group execution.
@@ -255,7 +268,9 @@ def compile_pipeline(dag: PipelineDAG, w: int,
                      prune: bool = True,
                      max_pad_iters: int = 8,
                      rows_per_step: int = 1,
-                     frame_h: int = 0) -> PipelinePlan:
+                     frame_h: int = 0,
+                     mem_cfg: MemConfig | Mapping[str, MemConfig] | None = None,
+                     schedule: Schedule | None = None) -> PipelinePlan:
     """Front door: DAG + memory spec -> scheduled, allocated plan.
 
     After scheduling, the allocation is validated by the cycle-accurate
@@ -267,25 +282,36 @@ def compile_pipeline(dag: PipelineDAG, w: int,
     ``frame_h`` folds temporal frame-ring pixels into the schedule's
     reported objective (see ilp.build_problem); it never affects the
     solve, so plans are still height-independent artifacts.
+
+    ``mem_cfg`` is an alias of ``mem`` (the name the serving stack and the
+    autotuner use for per-stage dicts); passing both is an error.
+    ``schedule`` skips the MILP solve and reuses a schedule the caller
+    already solved under an equivalent constraint problem — equivalence is
+    the caller's contract (see ilp.schedule_signature); the allocation and
+    simulator validation still run against the *given* memory configs.
     """
+    if mem_cfg is not None:
+        if mem is not DP:
+            raise TypeError("pass either mem= or mem_cfg=, not both")
+        mem = mem_cfg
     if isinstance(mem, MemConfig):
         cfg_of = {s: mem for s in dag.stages}
     else:
         cfg_of = dict(mem)
         for s in dag.stages:
             cfg_of.setdefault(s, DP)
-    prob = build_problem(dag, w, mem_cfg=cfg_of, prune=prune,
-                         frame_h=frame_h)
-    sched = solve_schedule(prob, objective=objective)
+    if schedule is None:
+        prob = build_problem(dag, w, mem_cfg=cfg_of, prune=prune,
+                             frame_h=frame_h)
+        sched = solve_schedule(prob, objective=objective)
+    else:
+        sched = schedule
 
     extra: dict[str, int] = {}
     for _ in range(max_pad_iters):
         alloc = allocate(dag, sched, cfg_of, w, extra_lines=extra)
-        max_n = max((b.n_lines_phys for b in alloc.buffers.values()),
-                    default=1)
-        max_sh = max((e.sh for e in dag.edges), default=1)
-        h_probe = 3 * (max_n + max_sh) + 4
-        rep = simulate(dag, sched, w, h_probe, alloc=alloc, cfg_of=cfg_of)
+        rep = simulate(dag, sched, w, probe_height(dag, alloc),
+                       alloc=alloc, cfg_of=cfg_of)
         if rep.ok:
             break
         progressed = False

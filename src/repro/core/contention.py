@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+from typing import Mapping, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +119,22 @@ def max_concurrent_accesses(accessors: Sequence[tuple[int, Accessor]],
         if c:
             worst = max(worst, max(c.values()))
     return worst
+
+
+def port_slack(peak_accesses: Mapping[str, int],
+               ports_of: Mapping[str, int]) -> int:
+    """Minimum spare port headroom across a design's buffers.
+
+    ``peak_accesses`` is per-buffer worst concurrent block accesses (from
+    the cycle-accurate simulator or :func:`max_concurrent_accesses`);
+    ``ports_of`` the port count of each buffer's memory. Slack 0 means
+    some block is saturated every worst-case cycle — the design is valid
+    but has no margin for extra accessors; the autotuner (dse.py) reports
+    it as the third Pareto axis. A design with no buffers has slack equal
+    to its (irrelevant) minimum port count, or 0 when empty.
+    """
+    slacks = [ports_of[p] - peak for p, peak in peak_accesses.items()]
+    return min(slacks, default=0)
 
 
 def required_delay(sh_late: int, w: int) -> int:

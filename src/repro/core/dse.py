@@ -1,22 +1,288 @@
-"""Design space exploration (paper Sec. 8.5, Fig. 10).
+"""Memory-config autotuner / design-space exploration (paper Sec. 5-8.5).
 
-Sweeps per-stage memory configurations (DP vs DPLC by default) over the
-cartesian product, compiles the optimal design for each combination and
-extracts the Pareto frontier of (area, power). The paper's observation —
-that the frontier shape is algorithm-specific — is reproduced by the
-benchmarks driving this module.
+The paper's core loop — pick on-chip memory structures that minimize SRAM
+while holding theoretical max throughput — as a callable subsystem rather
+than an offline figure generator. :func:`autotune` enumerates per-stage
+:class:`MemConfig` assignments (port counts, coalescing pack factors,
+block sizing), prunes candidates with the port-constraint machinery
+before ever invoking the MILP, memoizes solves across combos that induce
+the same constraint problem (ilp.schedule_signature), compiles the
+survivors, and scores each on three axes:
+
+  * **VMEM ring bytes** — the Pallas embodiment's footprint
+    (plan.vmem_ring_bytes), the serving stack's SRAM bill;
+  * **power** — the analytic energy model (power.memory_power) over the
+    candidate's allocation;
+  * **contention slack** — spare port headroom from the cycle-accurate
+    simulator (contention.port_slack): 0 means some block is saturated
+    at its worst-case cycle, higher means margin.
+
+The result is a ranked :class:`TuningResult`: ``best`` minimizes
+(vmem bytes, power, area) lexicographically, and ``pareto()`` is the
+frontier over {vmem bytes, power, slack}. The serving default (uniform
+DP) is always candidate #0, so ``best`` can never be worse than the
+untuned config — the invariant the CI smoke gate (benchmarks/
+tune_sweep.py) enforces end to end.
+
+The legacy 2-axis sweep (:func:`sweep`, Fig. 10) remains for the
+area/power Pareto plots; it now forwards ``frame_h``/``rows_per_step``
+to the post-PR-3 compile signature.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Sequence
+import time
+from typing import Mapping, Sequence
 
-from .codegen import PipelinePlan, compile_pipeline
+from .codegen import PipelinePlan, compile_pipeline, probe_height
+from .contention import port_slack
 from .dag import PipelineDAG
-from .linebuffer import MemConfig
+from .ilp import Schedule, build_problem, schedule_signature, solve_schedule
+from .linebuffer import DP, DPLC, QP, SP, MemConfig
+from .pruning import or_branch_count
+
+# The default search space: one axis per memory-structure decision.
+#   SP    — fewest ports: cheapest leakage/area per bit, tightest schedule;
+#   DP    — the paper's (and the serving stack's) default;
+#   QP    — port-rich: dissolves every port OR-group, line counts drop to
+#           the causality minimum, paid for in quadratic port area/leakage;
+#   DPLC  — dual-port with line coalescing (wide-word packing, Sec. 6);
+#   DPLC2 — coalescing capped at 2 lines/block (the paper's K=min(P,SH)
+#           split) — the pack-factor axis, distinct from DPLC wherever
+#           the uncapped pack exceeds 2.
+DPLC2 = MemConfig("DPLC2", ports=2, block_bits=DPLC.block_bits,
+                  coalesce=True, pack_cap=2)
+TUNE_OPTIONS: tuple[MemConfig, ...] = (SP, DP, QP, DPLC, DPLC2)
 
 
+@dataclasses.dataclass
+class Candidate:
+    """One evaluated memory combo: compiled plan + the three score axes.
+
+    After ranking, only the winning candidate keeps its compiled
+    ``plan``; the rest are released (``plan=None``) so a memoized
+    TuningResult holds one plan, not ``max_candidates`` of them — the
+    scored metrics are all a non-best candidate is ever read for.
+    """
+    combo: dict[str, str]               # buffer owner -> cfg name
+    mem_cfg: dict[str, MemConfig]       # full per-stage assignment
+    plan: PipelinePlan | None
+    vmem_bytes: int                     # plan.vmem_ring_bytes
+    power: float
+    area: float
+    alloc_bits: int
+    total_pixels: int                   # ILP objective (LB + frame rings)
+    contention_slack: int
+    pareto: bool = False
+
+    @property
+    def score(self) -> tuple:
+        return (self.vmem_bytes, self.power, self.area,
+                tuple(sorted(self.combo.items())))
+
+    def to_dict(self) -> dict:
+        return {"combo": dict(self.combo), "vmem_bytes": self.vmem_bytes,
+                "power": self.power, "area": self.area,
+                "alloc_bits": self.alloc_bits,
+                "total_pixels": self.total_pixels,
+                "contention_slack": self.contention_slack,
+                "pareto": self.pareto}
+
+
+@dataclasses.dataclass
+class TuneStats:
+    n_enumerated: int = 0               # combos drawn from the space
+    n_pruned_infeasible: int = 0        # port OR-group with no candidate
+    n_pruned_branches: int = 0          # branch product over branch_cap
+    n_solver_infeasible: int = 0        # all MILP branches infeasible
+    n_compiled: int = 0                 # candidates fully compiled+scored
+    n_sched_memo_hits: int = 0          # solves saved by signature memo
+    space_size: int = 0                 # |options| ** |owners|
+    truncated: bool = False             # space exceeded max_candidates
+    tune_s: float = 0.0
+
+
+@dataclasses.dataclass
+class TuningResult:
+    """Ranked outcome of one autotune run (one pipeline at one width)."""
+    pipeline: str
+    w: int
+    rows_per_step: int
+    frame_h: int
+    candidates: list[Candidate]         # ranked: candidates[0] is best
+    default: Candidate                  # uniform serving default (DP)
+    stats: TuneStats
+
+    @property
+    def best(self) -> Candidate:
+        return self.candidates[0]
+
+    def pareto(self) -> list[Candidate]:
+        """Frontier over (vmem bytes ↓, power ↓, contention slack ↑)."""
+        return [c for c in self.candidates if c.pareto]
+
+    def to_dict(self) -> dict:
+        return {
+            "pipeline": self.pipeline, "w": self.w,
+            "rows_per_step": self.rows_per_step, "frame_h": self.frame_h,
+            "best": self.best.to_dict(), "default": self.default.to_dict(),
+            "pareto": [c.to_dict() for c in self.pareto()],
+            "n_candidates": len(self.candidates),
+            "stats": dataclasses.asdict(self.stats),
+        }
+
+
+def buffer_owners(dag: PipelineDAG) -> list[str]:
+    """Stages owning a line buffer — the only stages whose memory config
+    is a real decision (everything else holds no SRAM)."""
+    return [p for p in dag.topo_order
+            if any(not dag.stages[e.consumer].is_output
+                   for e in dag.out_edges(p))]
+
+
+def _mark_pareto3(cands: list[Candidate]) -> None:
+    for c in cands:
+        c.pareto = not any(
+            q.vmem_bytes <= c.vmem_bytes and q.power <= c.power
+            and q.contention_slack >= c.contention_slack
+            and (q.vmem_bytes < c.vmem_bytes or q.power < c.power
+                 or q.contention_slack > c.contention_slack)
+            for q in cands)
+
+
+def _enumerate(owners: Sequence[str], options: Sequence[MemConfig],
+               base: Mapping[str, MemConfig]):
+    """Combos in evaluation order: the serving default first (so ``best``
+    is never worse than it), then the uniform assignments (the likely
+    winners, and the cheapest to reason about), then the cartesian
+    product. Duplicates are filtered by the caller via the seen-set."""
+    yield {p: base[p] for p in owners}
+    for opt in options:
+        yield {p: opt for p in owners}
+    for choice in itertools.product(options, repeat=len(owners)):
+        yield dict(zip(owners, choice))
+
+
+def autotune(dag: PipelineDAG, w: int,
+             options: Sequence[MemConfig] = TUNE_OPTIONS,
+             default: MemConfig | Mapping[str, MemConfig] = DP,
+             rows_per_step: int = 1,
+             frame_h: int = 0,
+             max_candidates: int = 128,
+             branch_cap: int = 256) -> TuningResult:
+    """Search per-stage memory assignments; return the ranked result.
+
+    ``options`` is the per-owner choice set; non-owner stages keep the
+    ``default`` config (their entry never touches SRAM). ``max_candidates``
+    bounds *compiled* candidates — pruned combos are free — and the
+    cartesian product is truncated beyond it (uniform combos are always
+    evaluated first, so truncation can only cost exotic mixes, never the
+    serving default). ``branch_cap`` prunes combos whose port OR-groups
+    would explode into more MILP branches than it allows.
+
+    Every returned candidate compiled cleanly and passed the simulator's
+    R1/R2/R3 validation inside compile_pipeline; scoring runs one more
+    simulate() probe to extract the contention-slack axis.
+    """
+    t0 = time.perf_counter()
+    if isinstance(default, MemConfig):
+        base = {s: default for s in dag.stages}
+    else:
+        base = {s: default.get(s, DP) for s in dag.stages}
+    owners = buffer_owners(dag)
+    stats = TuneStats(space_size=max(len(options), 1) ** len(owners))
+    sched_memo: dict[tuple, Schedule | None] = {}
+    seen: set[tuple] = set()
+    cands: list[Candidate] = []
+    default_cand: Candidate | None = None
+    default_key = tuple(sorted((p, dataclasses.astuple(base[p]))
+                               for p in owners))
+
+    for combo in _enumerate(owners, options, base):
+        if stats.n_compiled >= max_candidates:
+            stats.truncated = True
+            break
+        cfg_of = dict(base)
+        cfg_of.update(combo)
+        # dedup on full config identity — option *names* can collide
+        # (e.g. DP and DP_SIZED are both displayed "DP")
+        ckey = tuple(sorted((p, dataclasses.astuple(c))
+                            for p, c in combo.items()))
+        if ckey in seen:
+            continue
+        seen.add(ckey)
+        stats.n_enumerated += 1
+        is_default = ckey == default_key
+
+        sig = schedule_signature(dag, w, cfg_of)
+        if sig in sched_memo:
+            stats.n_sched_memo_hits += 1
+            sched = sched_memo[sig]
+            if sched is None:       # signature known infeasible/pruned
+                continue
+        else:
+            prob = build_problem(dag, w, mem_cfg=cfg_of, frame_h=frame_h)
+            if prob.port_problem.infeasible:
+                stats.n_pruned_infeasible += 1
+                sched_memo[sig] = None
+                continue
+            # the default combo is exempt from the cost-cap prune: it is
+            # the baseline 'tuned <= default' is measured against, and
+            # what the untuned serving path would solve anyway (falling
+            # back to solve_schedule's internal greedy cap if enormous)
+            if (not is_default
+                    and or_branch_count(prob.port_problem) > branch_cap):
+                stats.n_pruned_branches += 1
+                sched_memo[sig] = None
+                continue
+            try:
+                sched = solve_schedule(prob)
+            except ValueError:
+                stats.n_solver_infeasible += 1
+                sched_memo[sig] = None
+                continue
+            sched_memo[sig] = sched
+
+        try:
+            plan = compile_pipeline(dag, w, mem_cfg=cfg_of,
+                                    rows_per_step=rows_per_step,
+                                    frame_h=frame_h, schedule=sched)
+        except ValueError:          # ring padding failed under this mix
+            stats.n_solver_infeasible += 1
+            continue
+        stats.n_compiled += 1
+        rep = plan.verify(probe_height(dag, plan.alloc))
+        cand = Candidate(
+            combo={p: c.name for p, c in combo.items()},
+            mem_cfg=cfg_of, plan=plan,
+            vmem_bytes=plan.vmem_ring_bytes,
+            power=plan.power, area=plan.area,
+            alloc_bits=plan.total_alloc_bits,
+            total_pixels=sched.total_pixels,
+            contention_slack=port_slack(
+                rep.peak_block_accesses,
+                {p: cfg_of[p].ports for p in rep.peak_block_accesses}))
+        cands.append(cand)
+        if is_default:
+            default_cand = cand
+
+    if default_cand is None:
+        raise ValueError(
+            f"{dag.name}: the serving default config is infeasible at "
+            f"w={w} — autotune has no baseline to improve on"
+            + (f" ({len(cands)} other combos compiled)" if cands else ""))
+    cands.sort(key=lambda c: c.score)
+    _mark_pareto3(cands)
+    for c in cands[1:]:             # see Candidate: losers drop their plan
+        c.plan = None
+    stats.tune_s = time.perf_counter() - t0
+    return TuningResult(pipeline=dag.name, w=w, rows_per_step=rows_per_step,
+                        frame_h=frame_h, candidates=cands,
+                        default=default_cand, stats=stats)
+
+
+# --------------------------------------------------------------- legacy sweep
 @dataclasses.dataclass
 class DsePoint:
     combo: dict[str, str]        # stage -> cfg name
@@ -27,10 +293,13 @@ class DsePoint:
 
 
 def sweep(dag: PipelineDAG, w: int, options: Sequence[MemConfig],
-          max_points: int = 4096) -> list[DsePoint]:
-    owners = [p for p in dag.topo_order
-              if any(not dag.stages[e.consumer].is_output
-                     for e in dag.out_edges(p))]
+          max_points: int = 4096, frame_h: int = 0,
+          rows_per_step: int = 1) -> list[DsePoint]:
+    """Exhaustive (area, power) sweep over the cartesian product —
+    the paper's Fig. 10 axes, kept for the plotting example. Forwards
+    ``frame_h``/``rows_per_step`` to the post-PR-3 compile signature so
+    temporal pipelines sweep like spatial ones."""
+    owners = buffer_owners(dag)
     combos = itertools.product(options, repeat=len(owners))
     points: list[DsePoint] = []
     for i, choice in enumerate(combos):
@@ -38,7 +307,9 @@ def sweep(dag: PipelineDAG, w: int, options: Sequence[MemConfig],
             break
         cfg_of = dict(zip(owners, choice))
         try:
-            plan = compile_pipeline(dag, w, mem=cfg_of)
+            plan = compile_pipeline(dag, w, mem_cfg=cfg_of,
+                                    rows_per_step=rows_per_step,
+                                    frame_h=frame_h)
         except ValueError:
             continue  # infeasible under this memory mix
         points.append(DsePoint(

@@ -94,6 +94,22 @@ class ScheduleProblem:
                        for e in dag.out_edges(p))]
 
 
+def schedule_signature(dag: PipelineDAG, w: int, mem_cfg: dict) -> tuple:
+    """Schedule-equivalence key of a (dag, width, memory combo) problem.
+
+    Two memory combos yield the *same* constraint problem — hence the
+    same optimal schedule — iff every stage agrees on port count and
+    effective coalescing pack at width w; ``sized``/``block_bits`` only
+    change the downstream allocation, never the solve. The autotuner
+    (dse.py) memoizes MILP solves by this key so e.g. DP and DP_SIZED
+    cost one solve between them.
+    """
+    return (dag.name, w, tuple(
+        (s, mem_cfg[s].ports,
+         mem_cfg[s].pack_factor(w) if mem_cfg[s].coalesce else 1)
+        for s in sorted(mem_cfg)))
+
+
 def build_problem(dag: PipelineDAG, w: int, ports: int | dict[str, int] = 2,
                   var_of: dict[str, str] | None = None,
                   extra_accessors=None, prune: bool = True,

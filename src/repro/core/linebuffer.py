@@ -67,6 +67,13 @@ ASIC_SRAM_BITS = 64 * 1024
 DP = MemConfig("DP", ports=2, block_bits=ASIC_SRAM_BITS)
 SP = MemConfig("SP", ports=1, block_bits=ASIC_SRAM_BITS)
 DPLC = MemConfig("DPLC", ports=2, block_bits=ASIC_SRAM_BITS, coalesce=True)
+# Quad-port option for the autotuner (dse.py): with P=4 no evaluation
+# pipeline has more accessors than ports, so every port OR-group vanishes
+# and line counts drop to the pure causality minimum — bought with the
+# quadratic area and leakage cost of the extra ports (power.py). The
+# paper's evaluation stops at DP; QP exists to give the design-space
+# search a schedule-freedom-vs-power axis, not to model a specific SRAM.
+QP = MemConfig("QP", ports=4, block_bits=ASIC_SRAM_BITS)
 FPGA_DP = MemConfig("DP", ports=2, block_bits=FPGA_BRAM_BITS)
 FPGA_SP = MemConfig("SP", ports=1, block_bits=FPGA_BRAM_BITS)
 FPGA_DPLC = MemConfig("DPLC", ports=2, block_bits=FPGA_BRAM_BITS,

@@ -39,6 +39,20 @@ class PortConstraintProblem:
     infeasible: bool = False          # some group has zero feasible candidates
 
 
+def or_branch_count(pp: PortConstraintProblem) -> int:
+    """Number of MILP branches ``solve_schedule`` would enumerate.
+
+    The product of each OR-group's candidate count (1 when no groups
+    survive pruning). The autotuner (dse.py) uses this as a cheap
+    pre-solve cost bound: a memory combo whose branch product explodes
+    is pruned from the search rather than solved approximately.
+    """
+    n = 1
+    for g in pp.groups:
+        n *= max(len(g.candidates), 1)
+    return n
+
+
 def buffer_accessors(dag: PipelineDAG, producer: str,
                      var_of: dict[str, str] | None = None) -> list[Accessor]:
     """Accessors of the line buffer owned by ``producer``.

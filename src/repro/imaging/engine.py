@@ -59,7 +59,8 @@ class FrameEngine:
     def __init__(self, cache: PlanCache | None = None,
                  max_batch: int = 4, max_pending: int = 64,
                  tile_shape: tuple[int, int] = (128, 128),
-                 rows_per_step: int = 8):
+                 rows_per_step: int = 8,
+                 autotune: bool = False):
         self.cache = cache if cache is not None else PlanCache()
         self.max_batch = max_batch
         self.max_pending = max_pending
@@ -67,6 +68,9 @@ class FrameEngine:
         # row-group blocking factor for every executor this engine compiles;
         # clamped per-batch so frames shorter than R still execute
         self.rows_per_step = rows_per_step
+        # opt-in: serve every pipeline with the cache's autotuned memory
+        # config (one design-space search per (pipeline, width), memoized)
+        self.autotune = autotune
         self._queues: dict[str, BoundedFifo] = {}
         self.metrics = EngineMetrics()
 
@@ -123,14 +127,16 @@ class FrameEngine:
         t0 = time.perf_counter()
         if tiled:
             outs = [execute_tiled(self.cache, name, r.frames, th, tw,
-                                  batch=self.max_batch, rows_per_step=rps)
+                                  batch=self.max_batch, rows_per_step=rps,
+                                  tune=self.autotune)
                     for r in reqs]
             for o in outs:           # sync: dt must measure execution,
                 o.block_until_ready()  # not async dispatch
             vmem = self.cache.vmem_bytes()
         else:
             ex = self.cache.executor_for(name, h, w, batch=self.max_batch,
-                                         rows_per_step=rps)
+                                         rows_per_step=rps,
+                                         tune=self.autotune)
             inputs = {n: jnp.stack(pad_batch(
                 [jnp.asarray(r.frames[n], jnp.float32) for r in reqs],
                 self.max_batch, lambda: jnp.zeros((h, w), jnp.float32)))

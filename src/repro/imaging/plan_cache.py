@@ -32,6 +32,14 @@ exactly as stale). Evictions bump ``stats.plan_evictions`` /
 ``stats.exec_evictions``.
 
 Both levels report hit/miss/compile-time stats for the serving metrics.
+
+A third memo sits above both: the **autotune level** — keyed by
+``(pipeline, width)`` — runs the design-space search (core.dse.autotune)
+once and pins the winning per-stage memory combo. ``tune=True`` on
+``plan_for`` / ``executor_for`` / ``video_executor_for`` resolves the
+memory spec through it, so one search serves every row-group sibling,
+height, batch, and chunk variant; the winner's already-compiled plan is
+seeded into the plan level so tuning never pays the ILP twice.
 """
 from __future__ import annotations
 
@@ -40,7 +48,7 @@ import time
 from collections import OrderedDict
 from typing import Callable, Mapping
 
-from repro.core import algorithms
+from repro.core import algorithms, dse
 from repro.core.codegen import PipelinePlan, compile_pipeline, mem_cfg_key
 from repro.core.dag import PipelineDAG
 from repro.core.linebuffer import DP, MemConfig
@@ -59,6 +67,8 @@ class CacheStats:
     exec_evictions: int = 0
     plan_compile_s: float = 0.0
     exec_compile_s: float = 0.0
+    tunes: int = 0              # autotune searches run (one per (name, w))
+    tune_s: float = 0.0
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -82,7 +92,9 @@ class PlanCache:
                  mem: MemConfig | Mapping[str, MemConfig] = DP,
                  interpret: bool = True,
                  max_plans: int = 256,
-                 max_execs: int = 256):
+                 max_execs: int = 256,
+                 tune_options: tuple[MemConfig, ...] = dse.TUNE_OPTIONS,
+                 tune_max_candidates: int = 128):
         if max_plans < 1 or max_execs < 1:
             raise ValueError(f"max_plans/max_execs must be >= 1, got "
                              f"{max_plans}/{max_execs}")
@@ -93,6 +105,16 @@ class PlanCache:
         self._plans: OrderedDict[tuple, PipelinePlan] = OrderedDict()
         self._execs: OrderedDict[tuple, StencilExecutor | VideoExecutor] = \
             OrderedDict()
+        # autotune memo: (name, w) -> TuningResult; the winning mem combo
+        # is resolved from here so the design-space search runs once per
+        # (pipeline, width) and every R-sibling plan / executor variant
+        # (heights, batches, chunks) derives from the same winner.
+        # LRU-bounded like the other two levels (a result holds the
+        # winner's plan plus per-candidate metric summaries) — width-
+        # diverse tuned traffic must recycle searches, not grow forever
+        self._tunings: OrderedDict[tuple, dse.TuningResult] = OrderedDict()
+        self.tune_options = tune_options
+        self.tune_max_candidates = tune_max_candidates
         self.default_mem = mem
         self.interpret = interpret
         self.max_plans = max_plans
@@ -118,9 +140,51 @@ class PlanCache:
             del self._execs[k]
         self.stats.exec_evictions += len(stale)
 
+    # ------------------------------------------------------------ autotune
+    def tuning_for(self, name: str, w: int,
+                   rows_per_step: int = 1) -> dse.TuningResult:
+        """Memoized design-space search for (pipeline, width).
+
+        The search runs at the first caller's ``rows_per_step``; the
+        winning memory combo is reused for every row-group variant (the
+        schedule/allocation are R-independent, see plan_for). The
+        winner's compiled plan is seeded into the plan level so the
+        first tuned plan_for is a hit, not a re-solve.
+        """
+        key = (name, w)
+        if key in self._tunings:
+            self._tunings.move_to_end(key)
+            return self._tunings[key]
+        t0 = time.perf_counter()
+        res = dse.autotune(self.dag_for(name), w,
+                           options=self.tune_options,
+                           default=self.default_mem,
+                           rows_per_step=rows_per_step,
+                           max_candidates=self.tune_max_candidates)
+        self.stats.tunes += 1
+        self.stats.tune_s += time.perf_counter() - t0
+        while len(self._tunings) >= self.max_plans:
+            self._tunings.popitem(last=False)
+        self._tunings[key] = res
+        pkey = res.best.plan.cache_key
+        if pkey not in self._plans:
+            while len(self._plans) >= self.max_plans:
+                self._evict_lru_plan()
+            self._plans[pkey] = res.best.plan
+        return self._tunings[key]
+
+    def tuned_mem_for(self, name: str, w: int,
+                      rows_per_step: int = 1) -> dict[str, MemConfig]:
+        return self.tuning_for(name, w, rows_per_step).best.mem_cfg
+
     def plan_for(self, name: str, w: int,
                  mem: MemConfig | Mapping[str, MemConfig] | None = None,
-                 rows_per_step: int = 1) -> PipelinePlan:
+                 rows_per_step: int = 1, tune: bool = False) -> PipelinePlan:
+        if tune:
+            if mem is not None:
+                raise ValueError("tune=True picks the memory config; "
+                                 "pass either mem= or tune=, not both")
+            mem = self.tuned_mem_for(name, w, rows_per_step)
         mem = self.default_mem if mem is None else mem
         mkey = mem_cfg_key(mem)
         key = (name, w, mkey, rows_per_step)
@@ -159,7 +223,13 @@ class PlanCache:
     def executor_for(self, name: str, h: int, w: int,
                      batch: int | None = None,
                      mem: MemConfig | Mapping[str, MemConfig] | None = None,
-                     rows_per_step: int = 1) -> StencilExecutor:
+                     rows_per_step: int = 1,
+                     tune: bool = False) -> StencilExecutor:
+        if tune:
+            if mem is not None:
+                raise ValueError("tune=True picks the memory config; "
+                                 "pass either mem= or tune=, not both")
+            mem = self.tuned_mem_for(name, w, rows_per_step)
         mem = self.default_mem if mem is None else mem
         key = self._exec_key(name, w, mem_cfg_key(mem), rows_per_step,
                              "frame", h, batch)
@@ -179,11 +249,19 @@ class PlanCache:
     def video_executor_for(self, name: str, h: int, w: int,
                            chunk: int | None = None,
                            mem: MemConfig | Mapping[str, MemConfig] | None = None,
-                           rows_per_step: int = 1) -> VideoExecutor:
+                           rows_per_step: int = 1,
+                           tune: bool = False) -> VideoExecutor:
         """Streaming (frame-ring) executor — the video analogue of
         :meth:`executor_for`. Also serves spatial DAGs (empty state), so
         the VideoEngine can carry single-frame pipelines as degenerate
-        streams."""
+        streams. ``tune=True`` resolves the memory combo through the
+        memoized autotuner; chunk variants are siblings of the same
+        tuned plan."""
+        if tune:
+            if mem is not None:
+                raise ValueError("tune=True picks the memory config; "
+                                 "pass either mem= or tune=, not both")
+            mem = self.tuned_mem_for(name, w, rows_per_step)
         mem = self.default_mem if mem is None else mem
         key = self._exec_key(name, w, mem_cfg_key(mem), rows_per_step,
                              "video", h, chunk)

@@ -358,7 +358,13 @@ class StencilExecutor:
     rows_per_step: int
     vmem_bytes: int
     interpret: bool
-    _fn: "callable" = dataclasses.field(repr=False)
+    # the ImaGen plan this executor embodies (None for plan-less ad-hoc
+    # builds): the serving stack reports per-executor memory/power
+    # accounting — e.g. an autotuned config's SRAM bill — through it
+    plan: PipelinePlan | None = dataclasses.field(repr=False, default=None)
+    # kw_only: keeps _fn a *required* argument despite following a
+    # defaulted field — a fn-less executor must fail at construction
+    _fn: "callable" = dataclasses.field(repr=False, kw_only=True)
 
     def __call__(self, images: dict[str, jnp.ndarray]) -> jnp.ndarray:
         return self._fn(images)
@@ -381,7 +387,8 @@ def make_executor(dag: PipelineDAG, h: int, w: int,
     fn, vmem = _build_pipeline_call(dag, h, w, plan, interpret, batch,
                                     rows_per_step=r)
     return StencilExecutor(dag=dag, h=h, w=w, batch=batch, rows_per_step=r,
-                           vmem_bytes=vmem, interpret=interpret, _fn=fn)
+                           vmem_bytes=vmem, interpret=interpret, plan=plan,
+                           _fn=fn)
 
 
 def init_frame_state(depths: dict[str, int], h: int,
@@ -421,7 +428,9 @@ class VideoExecutor:
     frame_state_bytes: int          # device-resident frame-ring state
     interpret: bool
     depths: dict = dataclasses.field(repr=False)   # producer -> frames
-    _fn: "callable" = dataclasses.field(repr=False)
+    # compiled ImaGen plan (see StencilExecutor.plan) — None when ad hoc
+    plan: PipelinePlan | None = dataclasses.field(repr=False, default=None)
+    _fn: "callable" = dataclasses.field(repr=False, kw_only=True)
 
     def init_state(self) -> dict[str, jnp.ndarray]:
         """Zero frame rings — the stream-start (warm-up) state. Frames
@@ -494,4 +503,5 @@ def make_video_executor(dag: PipelineDAG, h: int, w: int,
                          vmem_bytes=vmem,
                          frame_state_bytes=sum((d - 1) * h * w * 4
                                                for d in depths.values()),
-                         interpret=interpret, depths=dict(depths), _fn=step)
+                         interpret=interpret, depths=dict(depths), plan=plan,
+                         _fn=step)

@@ -82,11 +82,15 @@ class VideoSession:
 class VideoEngine:
     def __init__(self, cache: PlanCache | None = None,
                  chunk: int = 4, max_pending: int = 64,
-                 rows_per_step: int = 8):
+                 rows_per_step: int = 8,
+                 autotune: bool = False):
         self.cache = cache if cache is not None else PlanCache()
         self.chunk = chunk
         self.max_pending = max_pending
         self.rows_per_step = rows_per_step
+        # opt-in: stream through the cache's autotuned memory config (one
+        # memoized design-space search per (pipeline, width))
+        self.autotune = autotune
         self._sessions: dict[int, VideoSession] = {}
         self._ids = itertools.count()
         self.metrics = EngineMetrics()
@@ -156,7 +160,8 @@ class VideoEngine:
         chunkable = all(p in inputs for p in dag.temporal_depths())
         chunk = n if (n == self.chunk and n > 1 and chunkable) else None
         return self.cache.video_executor_for(pipeline, h, w, chunk=chunk,
-                                             rows_per_step=rps)
+                                             rows_per_step=rps,
+                                             tune=self.autotune)
 
     def step(self) -> list[CompletedVideoFrame]:
         """Serve up to ``chunk`` frames of the neediest stream; [] idle."""

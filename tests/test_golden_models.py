@@ -1,0 +1,112 @@
+"""Golden pins for the analytic power model and the contention model.
+
+The autotuner ranks memory combos with ``core/power.py`` scores and the
+simulator's contention profile; a silent recalibration of either would
+re-rank the whole design space without failing any behavioral test. So
+the model outputs for every registered pipeline (and a spread of memory
+configs on one pipeline) are pinned in a checked-in fixture — changing a
+model constant now shows up as a reviewable fixture diff, not a silent
+shift in tuner decisions.
+
+Regenerate after an *intentional* model change with
+
+    PYTHONPATH=src python tests/test_golden_models.py --regen
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.core import algorithms, compile_pipeline
+from repro.core.contention import port_slack
+from repro.core.linebuffer import DP, DPLC, QP, SP
+from repro.core.power import power_breakdown
+from repro.core.dse import DPLC2
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "power_contention.json")
+W = 64
+PROBE_H = 96
+# one case per registered pipeline at the serving default, plus the full
+# option spread on the pipeline the autotuner most visibly re-configures
+CASES = ([(name, "DP") for name in sorted(algorithms.ALGORITHMS)]
+         + [(name, "DP") for name in sorted(algorithms.VIDEO_ALGORITHMS)]
+         + [("unsharp-m", c) for c in ["SP", "QP", "DPLC", "DPLC2"]])
+CONFIGS = {"DP": DP, "SP": SP, "QP": QP, "DPLC": DPLC, "DPLC2": DPLC2}
+
+
+def _dag(name):
+    return {**algorithms.ALGORITHMS, **algorithms.VIDEO_ALGORITHMS}[name]()
+
+
+def compute_case(name: str, cfg_name: str) -> dict:
+    plan = compile_pipeline(_dag(name), W, mem=CONFIGS[cfg_name])
+    rep = plan.verify(PROBE_H)
+    assert rep.ok, (name, cfg_name, rep.violations)
+    return {
+        "power": plan.power,
+        "area": plan.area,
+        "alloc_bits": plan.total_alloc_bits,
+        "power_breakdown": power_breakdown(plan.alloc),
+        "peak_block_accesses": rep.peak_block_accesses,
+        "accesses_per_cycle": rep.accesses_per_cycle,
+        "contention_slack": port_slack(
+            rep.peak_block_accesses,
+            {p: plan.mem_cfg[p].ports for p in rep.peak_block_accesses}),
+    }
+
+
+def compute_golden() -> dict:
+    return {f"{name}/{cfg}/w{W}": compute_case(name, cfg)
+            for name, cfg in CASES}
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if not os.path.exists(GOLDEN):
+        pytest.fail(f"golden fixture missing; run "
+                    f"PYTHONPATH=src python {__file__} --regen")
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name,cfg", CASES,
+                         ids=[f"{n}-{c}" for n, c in CASES])
+def test_models_match_golden(golden, name, cfg):
+    key = f"{name}/{cfg}/w{W}"
+    assert key in golden, f"{key} not pinned; regenerate the fixture"
+    exp = golden[key]
+    got = compute_case(name, cfg)
+    # ints (bits, peaks, slack) must match exactly; floats to 1e-9 rel
+    # (json round-trips doubles exactly — the slack is for arithmetic
+    # reassociation across python versions, not for model drift)
+    assert got["alloc_bits"] == exp["alloc_bits"]
+    assert got["peak_block_accesses"] == exp["peak_block_accesses"]
+    assert got["contention_slack"] == exp["contention_slack"]
+    assert got["power"] == pytest.approx(exp["power"], rel=1e-9)
+    assert got["area"] == pytest.approx(exp["area"], rel=1e-9)
+    assert got["accesses_per_cycle"] == pytest.approx(
+        exp["accesses_per_cycle"], rel=1e-9)
+    assert set(got["power_breakdown"]) == set(exp["power_breakdown"])
+    for buf, parts in got["power_breakdown"].items():
+        assert parts == pytest.approx(exp["power_breakdown"][buf],
+                                      rel=1e-9), (key, buf)
+
+
+def test_breakdown_sums_to_total(golden):
+    """power_breakdown is the itemization of memory_power — the golden
+    totals must be the sums of their own parts."""
+    for key, case in golden.items():
+        total = sum(b["total"] for b in case["power_breakdown"].values())
+        assert case["power"] == pytest.approx(total, rel=1e-12), key
+
+
+if __name__ == "__main__":
+    if "--regen" not in sys.argv:
+        raise SystemExit(f"usage: python {sys.argv[0]} --regen")
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    data = compute_golden()
+    with open(GOLDEN, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    print(f"wrote {GOLDEN} ({len(data)} cases)")

@@ -1,0 +1,125 @@
+"""Differential solver tests: MILP vs exhaustive brute force, fuzzed.
+
+The hand-written cases in test_ilp.py pin two tiny DAGs; here hypothesis
+generates random small pipelines (chains with optional multi-consumer
+joins, spatio-temporal extents, w up to 64) and asserts the MILP and the
+set-counting brute-force solver agree on
+
+  * the objective value (``total_pixels`` — line buffers + the constant
+    temporal frame-ring term from ``build_problem(frame_h=)``),
+  * the summed line-buffer allocation (individual buffers may trade
+    lines between equally-optimal schedules; the total cannot),
+  * the temporal accounting (``frame_depths`` / ``frame_pixels``).
+
+The brute-force box is sized from the MILP's own solution (+W margin):
+the MILP schedule is feasible under the stricter Eq. 12 arithmetization,
+hence oracle-feasible, so the box always contains a schedule matching
+the MILP objective — any disagreement is the brute solver finding a
+strictly better one, i.e. a real MILP bug. ``derandomize=True`` keeps CI
+reproducible.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="differential tests need "
+                    "hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import assume, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core.algorithms import identity_fn  # noqa: E402
+from repro.core.dsl import Pipeline  # noqa: E402
+from repro.core.ilp import (brute_force_schedule, build_problem,  # noqa: E402
+                            solve_schedule)
+
+MAX_BRUTE_BOX = 40_000   # (s_max+1)^n_free bound keeping one case < ~1 s
+
+
+@st.composite
+def small_problems(draw):
+    """(dag, w, frame_h): 1-2 compute stages, optional MC join, temporal
+    extents. Beyond w=8 stencil heights collapse to 1 so the brute-force
+    box (which scales with w * sh) stays enumerable up to w=64."""
+    w = draw(st.sampled_from([2, 3, 4, 6, 8, 16, 32, 64]))
+    n = draw(st.integers(1, 2))
+    tall = w <= 8
+    reads = [(draw(st.integers(1, 3)),                       # st
+              draw(st.integers(1, 3)) if tall else 1,        # sh
+              draw(st.integers(1, 2)))                       # sw
+             for _ in range(n)]
+    mc = n == 2 and draw(st.booleans())
+    frame_h = draw(st.sampled_from([0, 7]))
+
+    p = Pipeline("diff")
+    x = p.input("in")
+    prev = x
+    for i, (t, sh, sw) in enumerate(reads):
+        extra = [(x, 1, 1)] if (mc and i == n - 1) else []
+        prev = p.stage(f"s{i}", [(prev, t, sh, sw)] + extra, identity_fn)
+    p.output("out", [(prev, 1, 1)])
+    return p.build(), w, frame_h
+
+
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(small_problems())
+def test_milp_matches_brute_force(case):
+    dag, w, frame_h = case
+    prob = build_problem(dag, w, ports=2, frame_h=frame_h)
+    ilp = solve_schedule(prob)
+
+    s_max = max(ilp.starts.values()) + w
+    n_free = sum(1 for s in dag.topo_order
+                 if not dag.stages[s].is_input)
+    assume((s_max + 1) ** n_free <= MAX_BRUTE_BOX)
+
+    bf = brute_force_schedule(prob, s_max)
+    assert bf is not None, "MILP schedule feasible => box non-empty"
+    assert bf.total_pixels == ilp.total_pixels
+    assert (sum(bf.buffer_lines.values())
+            == sum(ilp.buffer_lines.values()))
+    # temporal accounting: same constant term on both sides
+    assert bf.frame_depths == ilp.frame_depths
+    assert bf.frame_pixels == ilp.frame_pixels
+    expected_frame_px = sum(
+        (d - 1) * frame_h * w for d in dag.temporal_depths().values())
+    assert ilp.frame_pixels == expected_frame_px
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(small_problems())
+def test_milp_schedule_passes_brute_force_oracle(case):
+    """The MILP schedule itself must satisfy the set-counting port oracle
+    — Eq. 12 is a *sufficient* arithmetization, so any violation here is
+    a constraint-construction bug, independent of optimality."""
+    from repro.core.contention import max_concurrent_accesses
+    from repro.core.pruning import buffer_accessors
+
+    dag, w, frame_h = case
+    prob = build_problem(dag, w, ports=2, frame_h=frame_h)
+    sched = solve_schedule(prob)
+    for p in prob.buffer_owners:
+        accs = buffer_accessors(dag, p)
+        pairs = [(sched.starts[a.stage], a) for a in accs]
+        t_hi = (max(s for s, _ in pairs)
+                + 3 * w * max(a.sh for _, a in pairs) + 2 * w)
+        assert max_concurrent_accesses(pairs, w, 0, t_hi) <= 2, \
+            (dag.name, p)
+
+
+def test_frame_h_is_constant_offset():
+    """frame_h shifts the objective by exactly the frame-ring pixels and
+    never changes the schedule or line counts (both solvers)."""
+    p = Pipeline("toff")
+    x = p.input("in")
+    a = p.stage("a", [(x, 3, 2, 1)], identity_fn)
+    p.output("out", [(a, 1, 1)])
+    dag = p.build()
+    w = 4
+    plain = solve_schedule(build_problem(dag, w, ports=2))
+    offs = solve_schedule(build_problem(dag, w, ports=2, frame_h=9))
+    assert offs.starts == plain.starts
+    assert offs.buffer_lines == plain.buffer_lines
+    assert offs.total_pixels == plain.total_pixels + 2 * 9 * w
+
+    bf_plain = brute_force_schedule(build_problem(dag, w, ports=2), 12)
+    bf_offs = brute_force_schedule(
+        build_problem(dag, w, ports=2, frame_h=9), 12)
+    assert bf_offs.total_pixels == bf_plain.total_pixels + 2 * 9 * w
