@@ -24,6 +24,12 @@ so the perf trajectory is tracked across PRs instead of only printed:
 ``--smoke`` is the CI perf gate: one small pipeline, R in {1, 8}, exit
 nonzero if the R=8 path fails to beat R=1 — catching accidental
 de-vectorization of the row-group hot path.
+
+``--trace out.json`` captures a Chrome/Perfetto span trace of the whole
+run (ILP solve, compile, cache, executor calls) plus a small autotuned
+FrameEngine drain (adding dse.autotune and engine-step/queueing spans),
+validates it against the exporter schema, and prints the flame summary —
+so the BENCH artifact ships with an attributable timeline.
 """
 from __future__ import annotations
 
@@ -38,8 +44,10 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import DP, algorithms, compile_pipeline  # noqa: E402
-from repro.imaging import PlanCache  # noqa: E402
+from repro.imaging import FrameEngine, FrameRequest, PlanCache  # noqa: E402
 from repro.kernels.stencil_pipeline import make_executor  # noqa: E402
+from repro.obs import export as obs_export  # noqa: E402
+from repro.obs import trace  # noqa: E402
 
 DEFAULT_PIPELINES = ["canny-s", "canny-m", "harris-s", "harris-m",
                      "unsharp-m", "xcorr-m", "denoise-m"]
@@ -132,6 +140,24 @@ def run_rowgroup(args, rng) -> dict:
             "pipelines_at_2x": n2x}
 
 
+def run_traced_engine(args, rng) -> dict:
+    """Small autotuned FrameEngine drain, run only under ``--trace``: the
+    sweep above exercises cache/ILP/compile/executor spans; this adds the
+    autotune search and engine-step/queueing layers so the emitted
+    timeline covers every instrumented layer in one artifact."""
+    name, w = args.pipelines[0], min(args.widths)
+    eng = FrameEngine(max_batch=2, max_pending=16, autotune=True)
+    reqs = [FrameRequest(i, name,
+                         {"in": rng.rand(args.height, w).astype(np.float32)})
+            for i in range(4)]
+    eng.run(reqs)
+    snap = eng.snapshot()
+    print(f"traced engine drain: {snap['frames_completed']} frames of "
+          f"{name} (autotuned), p95 latency "
+          f"{snap['latency']['p95'] * 1e3:.1f} ms")
+    return snap
+
+
 def bench_cached_cell(name: str, h: int, w: int, batch: int, frames: int,
                       baseline_frames: int,
                       rng: np.random.RandomState) -> dict:
@@ -200,6 +226,10 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: tiny sweep, fail if R=8 is slower "
                          "than R=1")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="capture a Chrome/Perfetto span trace of the "
+                         "run (plus a traced engine+autotune drain) and "
+                         "write it here")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -209,6 +239,9 @@ def main(argv=None) -> int:
         args.rows, args.frames = [1, 8], 4
         args.with_baseline = False
 
+    if args.trace:
+        trace.enable()
+
     rng = np.random.RandomState(0)
     report = {"schema": SCHEMA,
               "config": {"pipelines": args.pipelines, "widths": args.widths,
@@ -217,12 +250,21 @@ def main(argv=None) -> int:
     report["rowgroup"] = run_rowgroup(args, rng)
     if args.with_baseline:
         report["cached_vs_baseline"] = run_cached(args, rng)
+    if args.trace:
+        report["traced_engine"] = run_traced_engine(args, rng)
 
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1)
         print(f"wrote {args.out}")
+
+    if args.trace:
+        data = obs_export.export_global_trace(args.trace,
+                                              process_name="serve_frames")
+        print(f"wrote {args.trace} "
+              f"({sum(e.get('ph') == 'X' for e in data['traceEvents'])} "
+              f"spans)\n" + obs_export.flame_summary(data, top=12))
 
     if args.smoke:
         r_top = max(args.rows)

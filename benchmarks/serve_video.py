@@ -39,6 +39,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core import algorithms  # noqa: E402
 from repro.imaging import PlanCache  # noqa: E402
 from repro.kernels import ref  # noqa: E402
+from repro.obs import export as obs_export  # noqa: E402
+from repro.obs import trace  # noqa: E402
 from repro.video import VideoEngine, VideoFrame  # noqa: E402
 
 DEFAULT_PIPELINES = sorted(algorithms.VIDEO_ALGORITHMS)
@@ -110,6 +112,9 @@ def main(argv=None) -> int:
                     help="stream length per cell")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: tiny sweep, fail on correctness drift")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="capture a Chrome/Perfetto span trace of the run "
+                         "and write it here")
     ap.add_argument("--out", default="BENCH_video.json")
     args = ap.parse_args(argv)
 
@@ -117,6 +122,9 @@ def main(argv=None) -> int:
         args.pipelines = ["tmotion-t", "tbackground-t"]
         args.widths, args.height = [48], 32
         args.chunks, args.frames = [1, 4], 24
+
+    if args.trace:
+        trace.enable()
 
     rng = np.random.RandomState(0)
     cache = PlanCache()
@@ -158,6 +166,12 @@ def main(argv=None) -> int:
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1)
         print(f"wrote {args.out}")
+
+    if args.trace:
+        data = obs_export.export_global_trace(args.trace,
+                                              process_name="serve_video")
+        print(f"wrote {args.trace}\n" + obs_export.flame_summary(data,
+                                                                 top=12))
 
     worst = max(c["scale_ulp_vs_ref"] for c in cells)
     print(f"correctness: worst drift {worst:.0f} ULP at array scale "

@@ -43,6 +43,8 @@ from repro.core import algorithms  # noqa: E402
 from repro.imaging import PlanCache  # noqa: E402
 from repro.imaging.tiling import rows_per_step_for_tile  # noqa: E402
 from repro.kernels import ref  # noqa: E402
+from repro.obs import export as obs_export  # noqa: E402
+from repro.obs import trace  # noqa: E402
 
 DEFAULT_PIPELINES = (sorted(algorithms.ALGORITHMS)
                      + sorted(algorithms.VIDEO_ALGORITHMS))
@@ -149,12 +151,18 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: tiny sweep, fail on vmem regression "
                          "or correctness drift")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="capture a Chrome/Perfetto span trace of the run "
+                         "and write it here")
     ap.add_argument("--out", default="BENCH_tune.json")
     args = ap.parse_args(argv)
 
     if args.smoke:
         args.pipelines = ["unsharp-m", "canny-m", "tmotion-t"]
         args.widths, args.height, args.frames = [48], 32, 8
+
+    if args.trace:
+        trace.enable()
 
     cache = PlanCache(tune_max_candidates=args.max_candidates)
     cells = []
@@ -193,6 +201,12 @@ def main(argv=None) -> int:
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1)
         print(f"wrote {args.out}")
+
+    if args.trace:
+        data = obs_export.export_global_trace(args.trace,
+                                              process_name="tune_sweep")
+        print(f"wrote {args.trace}\n" + obs_export.flame_summary(data,
+                                                                 top=12))
 
     print(f"summary: power x{summary['geomean_power_ratio']:.3f} "
           f"alloc x{summary['geomean_alloc_ratio']:.3f} "

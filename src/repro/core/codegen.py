@@ -15,6 +15,8 @@ import json
 import math
 from typing import Mapping
 
+from repro.obs import trace
+
 from .dag import PipelineDAG
 from .ilp import Schedule, build_problem, solve_schedule
 from .linebuffer import DP, Allocation, MemConfig, allocate
@@ -290,6 +292,19 @@ def compile_pipeline(dag: PipelineDAG, w: int,
     the caller's contract (see ilp.schedule_signature); the allocation and
     simulator validation still run against the *given* memory configs.
     """
+    with trace.span("compile.pipeline", dag=dag.name, w=w,
+                    rows_per_step=rows_per_step,
+                    reused_schedule=schedule is not None) as sp:
+        plan = _compile_pipeline(dag, w, mem, objective, prune,
+                                 max_pad_iters, rows_per_step, frame_h,
+                                 mem_cfg, schedule)
+        sp.set(vmem_ring_bytes=plan.vmem_ring_bytes)
+        return plan
+
+
+def _compile_pipeline(dag, w, mem, objective, prune, max_pad_iters,
+                      rows_per_step, frame_h, mem_cfg,
+                      schedule) -> PipelinePlan:
     if mem_cfg is not None:
         if mem is not DP:
             raise TypeError("pass either mem= or mem_cfg=, not both")

@@ -35,6 +35,8 @@ import itertools
 import time
 from typing import Mapping, Sequence
 
+from repro.obs import trace
+
 from .codegen import PipelinePlan, compile_pipeline, probe_height
 from .contention import port_slack
 from .dag import PipelineDAG
@@ -185,6 +187,20 @@ def autotune(dag: PipelineDAG, w: int,
     R1/R2/R3 validation inside compile_pipeline; scoring runs one more
     simulate() probe to extract the contention-slack axis.
     """
+    with trace.span("dse.autotune", pipeline=dag.name, w=w) as sp:
+        res = _autotune(dag, w, options, default, rows_per_step, frame_h,
+                        max_candidates, branch_cap)
+        sp.set(enumerated=res.stats.n_enumerated,
+               compiled=res.stats.n_compiled,
+               pruned=(res.stats.n_pruned_infeasible
+                       + res.stats.n_pruned_branches),
+               memo_hits=res.stats.n_sched_memo_hits,
+               truncated=res.stats.truncated)
+        return res
+
+
+def _autotune(dag: PipelineDAG, w: int, options, default, rows_per_step,
+              frame_h, max_candidates, branch_cap) -> TuningResult:
     t0 = time.perf_counter()
     if isinstance(default, MemConfig):
         base = {s: default for s in dag.stages}

@@ -29,6 +29,8 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.obs import trace
+
 from .contention import PairConstraint, causality_delay
 from .dag import PipelineDAG
 from .pruning import PortConstraintProblem, build_port_constraints
@@ -127,6 +129,13 @@ def build_problem(dag: PipelineDAG, w: int, ports: int | dict[str, int] = 2,
     of the same (sh, sw) pattern hit the frame store, not the line
     buffer), so temporal edges add no schedule constraints.
     """
+    with trace.span("ilp.build_problem", dag=dag.name, w=w):
+        return _build_problem(dag, w, ports, var_of, extra_accessors,
+                              prune, mem_cfg, frame_h)
+
+
+def _build_problem(dag, w, ports, var_of, extra_accessors, prune, mem_cfg,
+                   frame_h) -> ScheduleProblem:
     var_of = dict(var_of or {})
     if mem_cfg is not None:
         ports = {p: mem_cfg[p].ports for p in dag.stages if p in mem_cfg}
@@ -261,6 +270,14 @@ def _solve_one_milp(prob: ScheduleProblem, enforced: Sequence[PairConstraint],
 
 def solve_schedule(prob: ScheduleProblem, objective: str = "exact") -> Schedule:
     """Branch over OR-groups, solve each MILP, keep the best."""
+    with trace.span("ilp.solve", dag=prob.dag.name, w=prob.w) as sp:
+        sched = _solve_schedule(prob, objective)
+        sp.set(n_branches=sched.n_branches, solve_ms=sched.solve_ms,
+               total_pixels=sched.total_pixels)
+        return sched
+
+
+def _solve_schedule(prob: ScheduleProblem, objective: str) -> Schedule:
     t0 = time.perf_counter()
     pp = prob.port_problem
     if pp.infeasible:

@@ -28,6 +28,7 @@ from typing import Mapping
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace
 from repro.serve.scheduling import BoundedFifo, assemble_batch, pad_batch
 
 from .metrics import EngineMetrics
@@ -60,8 +61,13 @@ class FrameEngine:
                  max_batch: int = 4, max_pending: int = 64,
                  tile_shape: tuple[int, int] = (128, 128),
                  rows_per_step: int = 8,
-                 autotune: bool = False):
-        self.cache = cache if cache is not None else PlanCache()
+                 autotune: bool = False,
+                 registry=None):
+        # ``registry``: a shared obs.MetricsRegistry for the serving
+        # telemetry plane; default = a private one per engine. A cache
+        # constructed here joins the same registry.
+        self.cache = cache if cache is not None else \
+            PlanCache(registry=registry)
         self.max_batch = max_batch
         self.max_pending = max_pending
         self.tile_shape = tile_shape
@@ -72,7 +78,8 @@ class FrameEngine:
         # config (one design-space search per (pipeline, width), memoized)
         self.autotune = autotune
         self._queues: dict[str, BoundedFifo] = {}
-        self.metrics = EngineMetrics()
+        self.metrics = EngineMetrics(registry=registry,
+                                     prefix="frame_engine")
 
     # ------------------------------------------------------------ admission
     def submit(self, req: FrameRequest) -> bool:
@@ -117,6 +124,11 @@ class FrameEngine:
             compatible=lambda a, b: a.shape == b.shape)
         if not reqs:
             return []
+        # queue wait: how long the batch's oldest frame sat admitted but
+        # unserved — the "where did the 40 ms go" term the executor time
+        # can never explain
+        queue_wait = time.perf_counter() - min(r.submitted_at for r in reqs)
+        self.metrics.observe_queue_wait(queue_wait)
         h, w = reqs[0].shape
         th, tw = self.tile_shape
         tiled = h > th or w > tw
@@ -124,28 +136,39 @@ class FrameEngine:
         # height on the tiled path, by the frame height otherwise
         rps = rows_per_step_for_tile(min(th, h) if tiled else h,
                                      self.rows_per_step)
-        t0 = time.perf_counter()
-        if tiled:
-            outs = [execute_tiled(self.cache, name, r.frames, th, tw,
-                                  batch=self.max_batch, rows_per_step=rps,
-                                  tune=self.autotune)
-                    for r in reqs]
-            for o in outs:           # sync: dt must measure execution,
-                o.block_until_ready()  # not async dispatch
-            vmem = self.cache.vmem_bytes()
-        else:
-            ex = self.cache.executor_for(name, h, w, batch=self.max_batch,
-                                         rows_per_step=rps,
-                                         tune=self.autotune)
-            inputs = {n: jnp.stack(pad_batch(
-                [jnp.asarray(r.frames[n], jnp.float32) for r in reqs],
-                self.max_batch, lambda: jnp.zeros((h, w), jnp.float32)))
-                for n in self.cache.dag_for(name).input_stages()}
-            batch_out = ex(inputs)
-            batch_out.block_until_ready()
-            outs = [batch_out[i] for i in range(len(reqs))]
-            vmem = ex.vmem_bytes
-        dt = time.perf_counter() - t0
+        with trace.span("engine.step", engine="frame", pipeline=name,
+                        n_frames=len(reqs), tiled=tiled, rows_per_step=rps,
+                        queue_wait_s=queue_wait) as sp:
+            t0 = time.perf_counter()
+            if tiled:
+                with trace.span("engine.execute", pipeline=name, xla=True):
+                    outs = [execute_tiled(self.cache, name, r.frames, th,
+                                          tw, batch=self.max_batch,
+                                          rows_per_step=rps,
+                                          tune=self.autotune)
+                            for r in reqs]
+                    for o in outs:       # sync: dt must measure execution,
+                        o.block_until_ready()  # not async dispatch
+                vmem = self.cache.vmem_bytes()
+            else:
+                ex = self.cache.executor_for(name, h, w,
+                                             batch=self.max_batch,
+                                             rows_per_step=rps,
+                                             tune=self.autotune)
+                with trace.span("engine.assemble", pipeline=name):
+                    inputs = {n: jnp.stack(pad_batch(
+                        [jnp.asarray(r.frames[n], jnp.float32)
+                         for r in reqs],
+                        self.max_batch,
+                        lambda: jnp.zeros((h, w), jnp.float32)))
+                        for n in self.cache.dag_for(name).input_stages()}
+                with trace.span("engine.execute", pipeline=name, xla=True):
+                    batch_out = ex(inputs)
+                    batch_out.block_until_ready()
+                outs = [batch_out[i] for i in range(len(reqs))]
+                vmem = ex.vmem_bytes
+            dt = time.perf_counter() - t0
+            sp.set(execute_s=dt)
         self.metrics.observe_batch(name, len(reqs), self.max_batch, dt, vmem,
                                    rows_per_step=rps)
         done: list[CompletedFrame] = []
@@ -167,3 +190,11 @@ class FrameEngine:
             for c in self.step():
                 results[c.rid] = c.output
         return results
+
+    def snapshot(self) -> dict:
+        """Engine + cache telemetry in one dict (the serving plane's
+        JSON view; the Prometheus view is metrics.registry)."""
+        snap = self.metrics.snapshot()
+        snap["pending"] = self.pending
+        snap["cache"] = self.cache.snapshot()
+        return snap

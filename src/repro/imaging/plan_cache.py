@@ -55,23 +55,49 @@ from repro.core.linebuffer import DP, MemConfig
 from repro.kernels.stencil_pipeline import (StencilExecutor, VideoExecutor,
                                             make_executor,
                                             make_video_executor)
+from repro.obs import trace
+from repro.obs.metrics import MetricsRegistry
+
+_STAT_FIELDS = (
+    "plan_hits", "plan_misses", "plan_evictions",
+    "exec_hits", "exec_misses", "exec_evictions",
+    "plan_compile_s", "exec_compile_s",
+    "tunes",                    # autotune searches run (one per (name, w))
+    "tune_s",
+)
 
 
-@dataclasses.dataclass
 class CacheStats:
-    plan_hits: int = 0
-    plan_misses: int = 0
-    plan_evictions: int = 0
-    exec_hits: int = 0
-    exec_misses: int = 0
-    exec_evictions: int = 0
-    plan_compile_s: float = 0.0
-    exec_compile_s: float = 0.0
-    tunes: int = 0              # autotune searches run (one per (name, w))
-    tune_s: float = 0.0
+    """Hit/miss/compile-time stats, backed by obs registry counters.
+
+    The attribute API is unchanged (``stats.plan_hits += 1`` everywhere
+    in this module and in tests); reads and writes route to counters in
+    ``registry`` so a shared registry exposes the cache alongside the
+    engines on one Prometheus endpoint.
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 prefix: str = "plan_cache"):
+        reg = registry if registry is not None else MetricsRegistry()
+        self.__dict__["registry"] = reg
+        self.__dict__["_c"] = {f: reg.counter(f"{prefix}_{f}")
+                               for f in _STAT_FIELDS}
+
+    def __getattr__(self, name):
+        try:
+            return self.__dict__["_c"][name].value
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def __setattr__(self, name, value) -> None:
+        c = self.__dict__["_c"].get(name)
+        if c is not None:
+            c.value = value
+        else:
+            self.__dict__[name] = value
 
     def snapshot(self) -> dict:
-        return dataclasses.asdict(self)
+        return {f: self._c[f].value for f in _STAT_FIELDS}
 
 
 class PlanCache:
@@ -94,7 +120,8 @@ class PlanCache:
                  max_plans: int = 256,
                  max_execs: int = 256,
                  tune_options: tuple[MemConfig, ...] = dse.TUNE_OPTIONS,
-                 tune_max_candidates: int = 128):
+                 tune_max_candidates: int = 128,
+                 registry: MetricsRegistry | None = None):
         if max_plans < 1 or max_execs < 1:
             raise ValueError(f"max_plans/max_execs must be >= 1, got "
                              f"{max_plans}/{max_execs}")
@@ -119,7 +146,7 @@ class PlanCache:
         self.interpret = interpret
         self.max_plans = max_plans
         self.max_execs = max_execs
-        self.stats = CacheStats()
+        self.stats = CacheStats(registry=registry)
 
     # ------------------------------------------------------------- lookups
     def dag_for(self, name: str) -> PipelineDAG:
@@ -156,11 +183,12 @@ class PlanCache:
             self._tunings.move_to_end(key)
             return self._tunings[key]
         t0 = time.perf_counter()
-        res = dse.autotune(self.dag_for(name), w,
-                           options=self.tune_options,
-                           default=self.default_mem,
-                           rows_per_step=rows_per_step,
-                           max_candidates=self.tune_max_candidates)
+        with trace.span("cache.tune", pipeline=name, w=w, hit=False):
+            res = dse.autotune(self.dag_for(name), w,
+                               options=self.tune_options,
+                               default=self.default_mem,
+                               rows_per_step=rows_per_step,
+                               max_candidates=self.tune_max_candidates)
         self.stats.tunes += 1
         self.stats.tune_s += time.perf_counter() - t0
         while len(self._tunings) >= self.max_plans:
@@ -198,11 +226,15 @@ class PlanCache:
         sibling = next((p for (n2, w2, m2, _r), p in self._plans.items()
                         if (n2, w2, m2) == (name, w, mkey)), None)
         t0 = time.perf_counter()
-        if sibling is not None:
-            plan = dataclasses.replace(sibling, rows_per_step=rows_per_step)
-        else:
-            plan = compile_pipeline(self.dag_for(name), w, mem=mem,
-                                    rows_per_step=rows_per_step)
+        with trace.span("cache.plan", pipeline=name, w=w,
+                        rows_per_step=rows_per_step, hit=False,
+                        derived=sibling is not None):
+            if sibling is not None:
+                plan = dataclasses.replace(sibling,
+                                           rows_per_step=rows_per_step)
+            else:
+                plan = compile_pipeline(self.dag_for(name), w, mem=mem,
+                                        rows_per_step=rows_per_step)
         self.stats.plan_compile_s += time.perf_counter() - t0
         while len(self._plans) >= self.max_plans:
             self._evict_lru_plan()
@@ -240,8 +272,10 @@ class PlanCache:
         plan = self.plan_for(name, w, mem=mem, rows_per_step=rows_per_step)
         self.stats.exec_misses += 1
         t0 = time.perf_counter()
-        ex = make_executor(self.dag_for(name), h, w, batch=batch, plan=plan,
-                           interpret=self.interpret)
+        with trace.span("cache.exec", pipeline=name, kind="frame",
+                        h=h, w=w, batch=batch, hit=False):
+            ex = make_executor(self.dag_for(name), h, w, batch=batch,
+                               plan=plan, interpret=self.interpret)
         self.stats.exec_compile_s += time.perf_counter() - t0
         self._store_exec(key, ex)
         return ex
@@ -272,8 +306,10 @@ class PlanCache:
         plan = self.plan_for(name, w, mem=mem, rows_per_step=rows_per_step)
         self.stats.exec_misses += 1
         t0 = time.perf_counter()
-        ex = make_video_executor(self.dag_for(name), h, w, plan=plan,
-                                 interpret=self.interpret, chunk=chunk)
+        with trace.span("cache.exec", pipeline=name, kind="video",
+                        h=h, w=w, chunk=chunk, hit=False):
+            ex = make_video_executor(self.dag_for(name), h, w, plan=plan,
+                                     interpret=self.interpret, chunk=chunk)
         self.stats.exec_compile_s += time.perf_counter() - t0
         self._store_exec(key, ex)
         return ex
@@ -282,6 +318,21 @@ class PlanCache:
     def vmem_bytes(self) -> int:
         """High-water VMEM across all resident executors (rings only)."""
         return max((e.vmem_bytes for e in self._execs.values()), default=0)
+
+    def snapshot(self) -> dict:
+        """One-call cache telemetry: hit/miss/eviction counters merged
+        with per-level residency and the resident-executor VMEM bill.
+        The engines and benchmarks report through this instead of
+        reaching into ``_plans``/``_execs``/``_tunings`` directly."""
+        return {
+            **self.stats.snapshot(),
+            "plans_resident": len(self._plans),
+            "execs_resident": len(self._execs),
+            "tunings_resident": len(self._tunings),
+            "max_plans": self.max_plans,
+            "max_execs": self.max_execs,
+            "vmem_bytes": self.vmem_bytes(),
+        }
 
     def __len__(self) -> int:
         return len(self._plans)

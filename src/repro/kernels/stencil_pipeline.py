@@ -58,6 +58,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.codegen import (PipelinePlan, row_group_rings, tap_name,
                                 temporal_tap_rings, temporal_taps)
+from repro.obs import trace
 from repro.core.dag import PipelineDAG, window_keys
 
 try:  # pltpu only resolves on TPU builds; interpret mode falls back to ANY
@@ -367,7 +368,12 @@ class StencilExecutor:
     _fn: "callable" = dataclasses.field(repr=False, kw_only=True)
 
     def __call__(self, images: dict[str, jnp.ndarray]) -> jnp.ndarray:
-        return self._fn(images)
+        # span covers the dispatch (async under jit); xla=True wraps the
+        # call in a jax.profiler.TraceAnnotation so it lines up with the
+        # XLA profile when both are captured
+        with trace.span("executor.call", xla=True, pipeline=self.dag.name,
+                        batch=self.batch, rows_per_step=self.rows_per_step):
+            return self._fn(images)
 
     @property
     def frame_shape(self) -> tuple[int, int]:
@@ -441,7 +447,9 @@ class VideoExecutor:
     def __call__(self, images: dict[str, jnp.ndarray],
                  state: dict[str, jnp.ndarray]
                  ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
-        return self._fn(images, state)
+        with trace.span("executor.call", xla=True, pipeline=self.dag.name,
+                        chunk=self.chunk, rows_per_step=self.rows_per_step):
+            return self._fn(images, state)
 
     @property
     def warmup_frames(self) -> int:

@@ -1,0 +1,33 @@
+"""Observability substrate: tracing spans + metrics registry + export.
+
+One layer, threaded through every other one, answering "where did this
+frame's milliseconds go" the way the paper's MILP answers "where would
+this design's cycles go":
+
+  * :mod:`trace <repro.obs.trace>` — nestable spans (context manager or
+    decorator) into a thread-safe ring buffer; zero-cost when disabled;
+    ``xla=True`` spans also enter ``jax.profiler.TraceAnnotation`` so
+    engine spans align with XLA's own profile.
+  * :mod:`metrics <repro.obs.metrics>` — counters, gauges, p50/p95/p99
+    histograms in a named registry with JSON snapshot + Prometheus text
+    exposition. Engine/cache metrics are backed by it; share one
+    registry across engines and caches to get a process-wide telemetry
+    plane.
+  * :mod:`export <repro.obs.export>` — Chrome/Perfetto ``trace_event``
+    JSON, a structural schema validator (the CI gate), and a text flame
+    summary (``tools/obs_report.py``).
+
+Spans land in a process-global tracer: ``trace.enable()`` lights up the
+ILP solve, autotune search, compile, cache, engine-step and executor
+instrumentation at once; benchmarks expose it as ``--trace out.json``.
+"""
+from . import export, metrics, trace
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      DEFAULT_TIME_BUCKETS, UNIT_BUCKETS)
+from .trace import TraceEvent, Tracer
+
+__all__ = [
+    "Counter", "DEFAULT_TIME_BUCKETS", "Gauge", "Histogram",
+    "MetricsRegistry", "TraceEvent", "Tracer", "UNIT_BUCKETS",
+    "export", "metrics", "trace",
+]

@@ -1,0 +1,188 @@
+"""Trace export: Chrome/Perfetto ``trace_event`` JSON + flame summary.
+
+The interchange layer between the in-process ring buffer (obs.trace) and
+the tools that read timelines:
+
+  * :func:`to_chrome_trace` — events -> the Trace Event Format dict
+    (``ph: "X"`` complete events, µs timestamps, one ``pid``, real
+    thread ids, span attributes under ``args``). Loadable directly in
+    ``ui.perfetto.dev`` or ``chrome://tracing``.
+  * :func:`validate_trace` — the schema check CI gates emitted traces
+    on: returns a list of human-readable errors (empty = valid). Kept
+    deliberately structural (required keys, types, non-negative times)
+    so it validates traces round-tripped through JSON files, not just
+    live objects.
+  * :func:`flame_summary` — aggregate text view: per span name, call
+    count, total/self wall time, mean and p95 duration. Self time
+    subtracts each span's *immediate* children (per-thread timestamp
+    containment), so "where did the milliseconds go" reads off the top
+    row even when spans nest five deep.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .trace import TraceEvent
+
+SCHEMA = "obs_trace/v1"
+
+
+# ------------------------------------------------------------------ export
+def to_chrome_trace(events: list[TraceEvent],
+                    process_name: str = "repro") -> dict:
+    """Render completed spans as a Chrome/Perfetto trace dict."""
+    pid = os.getpid()
+    trace_events: list[dict] = [{
+        "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+        "args": {"name": process_name},
+    }]
+    for e in events:
+        args = {k: _jsonable(v) for k, v in e.attrs.items()}
+        args["depth"] = e.depth
+        if e.parent is not None:
+            args["parent"] = e.parent
+        trace_events.append({
+            "name": e.name, "ph": "X", "cat": "repro",
+            "ts": e.ts_ns / 1e3, "dur": e.dur_ns / 1e3,
+            "pid": pid, "tid": e.tid, "args": args,
+        })
+    return {"traceEvents": trace_events, "displayTimeUnit": "ms",
+            "otherData": {"schema": SCHEMA}}
+
+
+def _jsonable(v):
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    return str(v)
+
+
+def write_trace(path: str, data: dict) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def load_trace(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def export_global_trace(path: str, process_name: str = "repro") -> dict:
+    """Drain the process-global tracer into a validated trace file — the
+    backend of the benchmarks' ``--trace out.json`` flag. Raises
+    ValueError if the emitted trace fails its own schema check (a trace
+    we cannot validate must never become a BENCH artifact)."""
+    from . import trace
+    data = to_chrome_trace(trace.events(), process_name=process_name)
+    errs = validate_trace(data)
+    if errs:
+        raise ValueError("emitted trace failed schema check: "
+                         + "; ".join(errs))
+    write_trace(path, data)
+    return data
+
+
+# ---------------------------------------------------------------- validate
+def validate_trace(data) -> list[str]:
+    """Structural schema check; returns error strings (empty = valid)."""
+    errs: list[str] = []
+    if not isinstance(data, dict):
+        return [f"trace must be a dict, got {type(data).__name__}"]
+    evs = data.get("traceEvents")
+    if not isinstance(evs, list):
+        return ["missing or non-list 'traceEvents'"]
+    schema = (data.get("otherData") or {}).get("schema")
+    if schema != SCHEMA:
+        errs.append(f"otherData.schema is {schema!r}, expected {SCHEMA!r}")
+    if not any(isinstance(e, dict) and e.get("ph") == "X" for e in evs):
+        errs.append("trace contains no complete ('X') span events")
+    for i, e in enumerate(evs):
+        where = f"traceEvents[{i}]"
+        if not isinstance(e, dict):
+            errs.append(f"{where}: not a dict")
+            continue
+        ph = e.get("ph")
+        if ph not in ("X", "M"):
+            errs.append(f"{where}: ph must be 'X' or 'M', got {ph!r}")
+            continue
+        if not isinstance(e.get("name"), str) or not e["name"]:
+            errs.append(f"{where}: missing span name")
+        for k in ("pid", "tid"):
+            if not isinstance(e.get(k), int):
+                errs.append(f"{where}: {k} must be an int")
+        if "args" in e and not isinstance(e["args"], dict):
+            errs.append(f"{where}: args must be a dict")
+        if ph == "X":
+            for k in ("ts", "dur"):
+                v = e.get(k)
+                if not isinstance(v, (int, float)) or v < 0:
+                    errs.append(f"{where}: {k} must be a number >= 0, "
+                                f"got {v!r}")
+    return errs
+
+
+# ------------------------------------------------------------------- flame
+def _span_rows(data: dict) -> list[dict]:
+    return [e for e in data.get("traceEvents", [])
+            if isinstance(e, dict) and e.get("ph") == "X"]
+
+
+def _self_times_us(spans: list[dict]) -> list[float]:
+    """Self time per span: dur minus immediate children, by per-thread
+    interval containment. Input order is arbitrary; output aligns with
+    the input list."""
+    self_us = [float(e.get("dur", 0.0)) for e in spans]
+    by_tid: dict[int, list[int]] = {}
+    for i, e in enumerate(spans):
+        by_tid.setdefault(e.get("tid", 0), []).append(i)
+    for idxs in by_tid.values():
+        # sort by start asc, then duration desc so parents precede children
+        idxs.sort(key=lambda i: (spans[i]["ts"], -spans[i]["dur"]))
+        stack: list[int] = []
+        for i in idxs:
+            ts, dur = spans[i]["ts"], spans[i]["dur"]
+            while stack and ts >= (spans[stack[-1]]["ts"]
+                                   + spans[stack[-1]]["dur"]):
+                stack.pop()
+            if stack:
+                self_us[stack[-1]] -= dur
+            stack.append(i)
+    return self_us
+
+
+def flame_summary(data: dict, top: int = 20) -> str:
+    """Aggregate per-name text summary, hottest self-time first."""
+    spans = _span_rows(data)
+    if not spans:
+        return "(no spans)"
+    self_us = _self_times_us(spans)
+    agg: dict[str, dict] = {}
+    for e, s in zip(spans, self_us):
+        a = agg.setdefault(e["name"], {"n": 0, "total": 0.0, "self": 0.0,
+                                       "durs": []})
+        a["n"] += 1
+        a["total"] += e["dur"]
+        a["self"] += s
+        a["durs"].append(e["dur"])
+    rows = sorted(agg.items(), key=lambda kv: -kv[1]["self"])[:top]
+    wall = (max(e["ts"] + e["dur"] for e in spans)
+            - min(e["ts"] for e in spans))
+    out = [f"{'span':<28} {'count':>6} {'total ms':>10} {'self ms':>10} "
+           f"{'self %':>7} {'mean ms':>9} {'p95 ms':>9}"]
+    for name, a in rows:
+        durs = np.asarray(a["durs"])
+        out.append(
+            f"{name:<28} {a['n']:>6} {a['total'] / 1e3:>10.2f} "
+            f"{a['self'] / 1e3:>10.2f} "
+            f"{100.0 * a['self'] / wall if wall else 0.0:>6.1f}% "
+            f"{float(durs.mean()) / 1e3:>9.3f} "
+            f"{float(np.percentile(durs, 95)) / 1e3:>9.3f}")
+    out.append(f"{'(trace wall)':<28} {'':>6} {wall / 1e3:>10.2f}")
+    return "\n".join(out)

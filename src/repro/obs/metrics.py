@@ -1,0 +1,204 @@
+"""Metrics registry: counters, gauges, and bucketed histograms.
+
+The serving telemetry plane's data model. Three metric kinds cover the
+engines' needs:
+
+  * :class:`Counter` — monotone totals (frames submitted, cache hits,
+    seconds inside the executor). Floats allowed: compile/tune seconds
+    accumulate here too.
+  * :class:`Gauge` — instantaneous or high-water values (resident VMEM).
+  * :class:`Histogram` — bucketed distributions with p50/p95/p99
+    estimates, replacing the mean/max-only ``RunningStat`` view of
+    latency. Percentiles interpolate linearly inside the bucket that
+    crosses the rank, clamped to the observed min/max, so the estimate
+    is always within one bucket width of the exact value.
+
+A :class:`MetricsRegistry` names and owns metrics (get-or-create, type
+checked) and renders two views: ``snapshot()`` (JSON-able dict, the
+programmatic API the engines' existing ``snapshot()`` methods sit on)
+and ``to_prometheus_text()`` (the text exposition format a scraper or a
+file-based sidecar consumes). Engines and the plan cache each default to
+a private registry; passing one shared registry to all of them is what
+makes a process-wide telemetry plane — every subsystem's metrics under
+one scrape, disambiguated by prefix.
+
+Metric updates take the registry lock only at creation; observes touch
+per-metric state under the GIL like the plain-int counters they replace
+(the engines are single-threaded control loops — same contract as
+before, now stated).
+"""
+from __future__ import annotations
+
+import bisect
+import re
+import threading
+
+# exponential time buckets: 1 µs .. ~137 s, factor 2 (latency, compile,
+# queue-wait); distributions tighter than this use explicit buckets
+DEFAULT_TIME_BUCKETS = tuple(1e-6 * 2 ** k for k in range(28))
+# linear unit-interval buckets (batch-fill ratios)
+UNIT_BUCKETS = tuple(i / 20 for i in range(1, 21))
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    return _NAME_RE.sub("_", name)
+
+
+class Counter:
+    __slots__ = ("name", "help", "value")
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self.value = 0
+
+    def inc(self, n=1) -> None:
+        self.value += n
+
+
+class Gauge:
+    __slots__ = ("name", "help", "value")
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self.value = 0
+
+    def set(self, v) -> None:
+        self.value = v
+
+    def set_max(self, v) -> None:
+        """High-water update — the VMEM-footprint idiom."""
+        self.value = max(self.value, v)
+
+
+class Histogram:
+    """Fixed-bucket histogram with exact count/sum/min/max sidecars.
+
+    ``buckets`` are upper bounds (ascending); values above the last
+    bound land in an implicit +Inf bucket. The exact extrema make the
+    percentile clamp tight and keep the old RunningStat snapshot keys
+    (count/mean/max/min) exact, so migrated engine metrics lose nothing.
+    """
+    __slots__ = ("name", "help", "buckets", "counts", "count", "total",
+                 "min", "max")
+
+    def __init__(self, name: str, buckets=DEFAULT_TIME_BUCKETS,
+                 help: str = ""):
+        bounds = tuple(float(b) for b in buckets)
+        if not bounds or list(bounds) != sorted(set(bounds)):
+            raise ValueError(f"buckets must be ascending and unique, "
+                             f"got {buckets!r}")
+        self.name = name
+        self.help = help
+        self.buckets = bounds
+        self.counts = [0] * (len(bounds) + 1)     # +1: the +Inf bucket
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = 0.0
+
+    def observe(self, x: float) -> None:
+        self.counts[bisect.bisect_left(self.buckets, x)] += 1
+        self.count += 1
+        self.total += x
+        self.min = min(self.min, x)
+        self.max = max(self.max, x)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Estimate the q-th percentile (0..100) by linear interpolation
+        within the bucket whose cumulative count crosses the rank."""
+        if not self.count:
+            return 0.0
+        rank = q / 100.0 * self.count
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if not c:
+                continue
+            lo = self.buckets[i - 1] if i > 0 else self.min
+            hi = self.buckets[i] if i < len(self.buckets) else self.max
+            if cum + c >= rank:
+                frac = (rank - cum) / c
+                est = lo + frac * (hi - lo)
+                return min(max(est, self.min), self.max)
+            cum += c
+        return self.max  # pragma: no cover - rank <= count always crosses
+
+    def snapshot(self) -> dict:
+        return {"count": self.count, "mean": self.mean,
+                "max": self.max if self.count else 0.0,
+                "min": self.min if self.count else 0.0,
+                "p50": self.percentile(50.0),
+                "p95": self.percentile(95.0),
+                "p99": self.percentile(99.0)}
+
+
+class MetricsRegistry:
+    """Named metric store: get-or-create, two export views."""
+
+    def __init__(self):
+        self._metrics: dict[str, Counter | Gauge | Histogram] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, kind, **kw):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = kind(name, **kw)
+            elif type(m) is not kind:
+                raise TypeError(f"metric {name!r} already registered as "
+                                f"{type(m).__name__}, not {kind.__name__}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(name, Counter, help=help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(name, Gauge, help=help)
+
+    def histogram(self, name: str, buckets=DEFAULT_TIME_BUCKETS,
+                  help: str = "") -> Histogram:
+        return self._get(name, Histogram, buckets=buckets, help=help)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def snapshot(self) -> dict:
+        """JSON-able view: scalars for counters/gauges, stat dicts for
+        histograms."""
+        with self._lock:
+            items = list(self._metrics.items())
+        return {name: (m.snapshot() if isinstance(m, Histogram) else m.value)
+                for name, m in items}
+
+    def to_prometheus_text(self) -> str:
+        """Prometheus text exposition (the scrape-endpoint payload)."""
+        with self._lock:
+            items = sorted(self._metrics.items())
+        lines: list[str] = []
+        for name, m in items:
+            pname = _prom_name(name)
+            if m.help:
+                lines.append(f"# HELP {pname} {m.help}")
+            if isinstance(m, Counter):
+                lines.append(f"# TYPE {pname} counter")
+                lines.append(f"{pname} {m.value}")
+            elif isinstance(m, Gauge):
+                lines.append(f"# TYPE {pname} gauge")
+                lines.append(f"{pname} {m.value}")
+            else:
+                lines.append(f"# TYPE {pname} histogram")
+                cum = 0
+                for bound, c in zip(m.buckets, m.counts):
+                    cum += c
+                    lines.append(f'{pname}_bucket{{le="{bound:g}"}} {cum}')
+                lines.append(f'{pname}_bucket{{le="+Inf"}} {m.count}')
+                lines.append(f"{pname}_sum {m.total}")
+                lines.append(f"{pname}_count {m.count}")
+        return "\n".join(lines) + ("\n" if lines else "")

@@ -40,7 +40,8 @@ from repro.imaging.metrics import EngineMetrics
 from repro.imaging.plan_cache import PlanCache
 from repro.imaging.tiling import rows_per_step_for_tile
 from repro.kernels.stencil_pipeline import init_frame_state
-from repro.serve.scheduling import BoundedFifo, RunningStat, assemble_batch
+from repro.obs import trace
+from repro.serve.scheduling import BoundedFifo, assemble_batch
 
 
 @dataclasses.dataclass
@@ -83,8 +84,12 @@ class VideoEngine:
     def __init__(self, cache: PlanCache | None = None,
                  chunk: int = 4, max_pending: int = 64,
                  rows_per_step: int = 8,
-                 autotune: bool = False):
-        self.cache = cache if cache is not None else PlanCache()
+                 autotune: bool = False,
+                 registry=None):
+        # ``registry``: a shared obs.MetricsRegistry for the serving
+        # telemetry plane; default = a private one per engine
+        self.cache = cache if cache is not None else \
+            PlanCache(registry=registry)
         self.chunk = chunk
         self.max_pending = max_pending
         self.rows_per_step = rows_per_step
@@ -93,8 +98,11 @@ class VideoEngine:
         self.autotune = autotune
         self._sessions: dict[int, VideoSession] = {}
         self._ids = itertools.count()
-        self.metrics = EngineMetrics()
-        self.warmup_latency_s = RunningStat()
+        self.metrics = EngineMetrics(registry=registry,
+                                     prefix="video_engine")
+        self.warmup_latency_s = self.metrics.registry.histogram(
+            "video_engine_warmup_latency_s",
+            help="stream open -> first fully-warm output, seconds")
 
     # ------------------------------------------------------------- streams
     def open_stream(self, pipeline: str, h: int, w: int) -> int:
@@ -172,22 +180,35 @@ class VideoEngine:
             return []
         s = self._sessions[sid]
         n = len(frames)
-        ex = self._executor(s.pipeline, s.h, s.w, n)
-        t0 = time.perf_counter()
-        if ex.chunk is not None:
-            ins = {name: jnp.stack([jnp.asarray(f.frames[name], jnp.float32)
-                                    for f in frames])
-                   for name in s.inputs}
-            out, s.state = ex(ins, s.state)
-            out.block_until_ready()
-            outs = [out[i] for i in range(n)]
-        else:
-            outs = []
-            for f in frames:
-                o, s.state = ex(f.frames, s.state)
-                outs.append(o)
-            outs[-1].block_until_ready()
-        dt = time.perf_counter() - t0
+        queue_wait = (time.perf_counter()
+                      - min(f.submitted_at for f in frames))
+        self.metrics.observe_queue_wait(queue_wait)
+        with trace.span("engine.step", engine="video", pipeline=s.pipeline,
+                        stream=sid, n_frames=n,
+                        queue_wait_s=queue_wait) as sp:
+            ex = self._executor(s.pipeline, s.h, s.w, n)
+            t0 = time.perf_counter()
+            if ex.chunk is not None:
+                with trace.span("engine.assemble", pipeline=s.pipeline):
+                    ins = {name: jnp.stack(
+                        [jnp.asarray(f.frames[name], jnp.float32)
+                         for f in frames])
+                        for name in s.inputs}
+                with trace.span("engine.execute", pipeline=s.pipeline,
+                                xla=True):
+                    out, s.state = ex(ins, s.state)
+                    out.block_until_ready()
+                outs = [out[i] for i in range(n)]
+            else:
+                with trace.span("engine.execute", pipeline=s.pipeline,
+                                xla=True):
+                    outs = []
+                    for f in frames:
+                        o, s.state = ex(f.frames, s.state)
+                        outs.append(o)
+                    outs[-1].block_until_ready()
+            dt = time.perf_counter() - t0
+            sp.set(execute_s=dt, chunked=ex.chunk is not None)
         self.metrics.observe_batch(s.pipeline, n, self.chunk, dt,
                                    ex.vmem_bytes + ex.frame_state_bytes,
                                    rows_per_step=ex.rows_per_step)
@@ -230,4 +251,6 @@ class VideoEngine:
         snap = self.metrics.snapshot()
         snap["warmup_latency"] = self.warmup_latency_s.snapshot()
         snap["open_streams"] = len(self._sessions)
+        snap["pending"] = self.pending
+        snap["cache"] = self.cache.snapshot()
         return snap

@@ -1,0 +1,67 @@
+"""Render a captured trace: text flame summary + normalized Perfetto JSON.
+
+    PYTHONPATH=src python tools/obs_report.py trace.json
+    PYTHONPATH=src python tools/obs_report.py trace.json --top 30
+    PYTHONPATH=src python tools/obs_report.py trace.json --validate
+    PYTHONPATH=src python tools/obs_report.py trace.json --out clean.json
+
+Input is a trace emitted by any ``--trace out.json`` benchmark flag (or
+``repro.obs.export.write_trace``). The default action prints the
+aggregate flame summary — per span name: call count, total and *self*
+wall time (children subtracted), mean and p95 — which is the terminal
+answer to "where did the milliseconds go". ``--out`` re-writes the trace
+normalized (spans only, schema-stamped) for sharing; open either file in
+ui.perfetto.dev or chrome://tracing for the interactive timeline.
+
+``--validate`` exits nonzero if the file fails the exporter's schema
+check; CI runs this over the traced smoke serve so a malformed trace
+artifact can never ship silently.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import export  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Flame summary + validation for obs trace JSON")
+    ap.add_argument("trace", help="trace JSON file (from --trace runs)")
+    ap.add_argument("--top", type=int, default=20,
+                    help="rows in the flame summary")
+    ap.add_argument("--out", default=None, metavar="OUT_JSON",
+                    help="write a normalized copy of the trace here")
+    ap.add_argument("--validate", action="store_true",
+                    help="exit nonzero if the trace fails the schema check")
+    args = ap.parse_args(argv)
+
+    data = export.load_trace(args.trace)
+    errs = export.validate_trace(data)
+    if errs:
+        print(f"{args.trace}: INVALID ({len(errs)} schema errors)")
+        for e in errs[:20]:
+            print(f"  - {e}")
+        if args.validate:
+            return 1
+    elif args.validate:
+        n = sum(1 for e in data["traceEvents"] if e.get("ph") == "X")
+        names = sorted({e["name"] for e in data["traceEvents"]
+                        if e.get("ph") == "X"})
+        print(f"{args.trace}: valid ({n} spans: {', '.join(names)})")
+        return 0
+
+    print(export.flame_summary(data, top=args.top))
+
+    if args.out:
+        export.write_trace(args.out, data)
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
