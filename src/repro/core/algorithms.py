@@ -387,7 +387,8 @@ def execute_reference(dag: PipelineDAG, inputs: dict[str, jnp.ndarray]
 
 
 def execute_reference_video(dag: PipelineDAG,
-                            videos: dict[str, jnp.ndarray]) -> jnp.ndarray:
+                            videos: dict[str, jnp.ndarray],
+                            return_history: bool = False):
     """Multi-frame oracle: (T, H, W) inputs -> (T, H, W) output.
 
     Frames run in stream order through plain per-frame stage evaluation;
@@ -395,6 +396,13 @@ def execute_reference_video(dag: PipelineDAG,
     history list (most recent first). Frames before t = 0 read as zero —
     the same causal zero padding as the spatial frame top/left, and the
     warm-up semantics the VideoEngine reproduces.
+
+    With ``return_history=True`` returns ``(output, history)`` where
+    ``history`` maps each temporal producer to its last d-1 frames,
+    newest first (shorter when T < d-1) — exactly the state a serving
+    session needs to resume the stream, which is how the VideoEngine's
+    reference fallback rung resynchronizes device frame rings after
+    serving frames off the compiled path.
     """
     t_frames = next(iter(videos.values())).shape[0]
     depths = dag.temporal_depths()
@@ -435,4 +443,7 @@ def execute_reference_video(dag: PipelineDAG,
         for p, d in depths.items():
             history[p] = [vals[p]] + history[p][:d - 2]
         outs.append(vals[dag.output_stages()[0]])
-    return jnp.stack(outs)
+    out = jnp.stack(outs)
+    if return_history:
+        return out, history
+    return out

@@ -20,9 +20,17 @@ from repro.obs.metrics import (DEFAULT_TIME_BUCKETS, UNIT_BUCKETS,
                                MetricsRegistry)
 
 _COUNTERS = {
+    "frames_offered": "submit() calls that reached a decision",
     "frames_submitted": "frames accepted into an engine queue",
     "frames_completed": "frames executed and delivered",
-    "frames_rejected": "backpressure refusals at admission",
+    "frames_rejected": "admission refusals (backpressure, malformed, "
+                       "rate-limited)",
+    "frames_shed": "admitted frames dropped by the overload policy",
+    "frames_cancelled": "admitted frames drained by a stream close",
+    "frames_failed": "frames lost to an exhausted fallback ladder",
+    "deadline_missed": "frames completed after their SLA deadline",
+    "executor_retries": "executor/compile attempts retried with backoff",
+    "fallback_frames": "frames served by a non-primary ladder rung",
     "batches": "executor batches dispatched",
     "execute_s": "seconds inside executor calls (device-synchronous)",
 }
@@ -52,6 +60,12 @@ class EngineMetrics:
         self.queue_wait_s = self.registry.histogram(
             f"{prefix}_queue_wait_s", buckets=DEFAULT_TIME_BUCKETS,
             help="head-of-batch seconds queued before assembly")
+        self.retry_backoff_s = self.registry.histogram(
+            f"{prefix}_retry_backoff_s", buckets=DEFAULT_TIME_BUCKETS,
+            help="jittered backoff delays slept before retries")
+        self.deadline_miss_s = self.registry.histogram(
+            f"{prefix}_deadline_miss_s", buckets=DEFAULT_TIME_BUCKETS,
+            help="overrun past the SLA deadline for late completions")
         self._vmem = self.registry.gauge(
             f"{prefix}_vmem_high_water_bytes",
             help="max VMEM footprint across executed batches")
@@ -79,6 +93,14 @@ class EngineMetrics:
     def observe_queue_wait(self, seconds: float) -> None:
         self.queue_wait_s.observe(seconds)
 
+    def observe_retry(self, delay_s: float) -> None:
+        self.executor_retries += 1
+        self.retry_backoff_s.observe(delay_s)
+
+    def observe_deadline_miss(self, overrun_s: float) -> None:
+        self.deadline_missed += 1
+        self.deadline_miss_s.observe(max(overrun_s, 0.0))
+
     # ------------------------------------------------------------ readouts
     @property
     def vmem_high_water(self) -> int:
@@ -90,18 +112,50 @@ class EngineMetrics:
 
     @property
     def in_flight(self) -> int:
-        """Accepted but not yet completed — the reconciliation residue:
-        submitted == completed + in_flight always (rejected frames were
-        never admitted, so they sit outside this identity)."""
-        return self.frames_submitted - self.frames_completed
+        """Admitted but not yet resolved — the reconciliation residue.
+        Every admitted frame ends completed, shed, cancelled, or failed;
+        rejected frames were never admitted, so they sit outside this
+        residue (but inside :meth:`reconcile`'s offered identity)."""
+        return (self.frames_submitted - self.frames_completed
+                - self.frames_shed - self.frames_cancelled
+                - self.frames_failed)
+
+    def reconcile(self) -> dict:
+        """The control plane's accounting identity, both sides spelled
+        out: ``offered == completed + shed + rejected + cancelled +
+        failed + in_flight``. ``balanced`` is the invariant the chaos
+        soak gates on — a frame that vanished (or was double-counted)
+        anywhere in admission/shed/cancel/failure paths breaks it."""
+        accounted = (self.frames_completed + self.frames_shed
+                     + self.frames_rejected + self.frames_cancelled
+                     + self.frames_failed + self.in_flight)
+        return {
+            "offered": self.frames_offered,
+            "completed": self.frames_completed,
+            "shed": self.frames_shed,
+            "rejected": self.frames_rejected,
+            "cancelled": self.frames_cancelled,
+            "failed": self.frames_failed,
+            "in_flight": self.in_flight,
+            "accounted": accounted,
+            "balanced": self.frames_offered == accounted,
+        }
 
     def snapshot(self) -> dict:
         wall = self.wall_s
         return {
+            "frames_offered": self.frames_offered,
             "frames_submitted": self.frames_submitted,
             "frames_completed": self.frames_completed,
             "frames_rejected": self.frames_rejected,
+            "frames_shed": self.frames_shed,
+            "frames_cancelled": self.frames_cancelled,
+            "frames_failed": self.frames_failed,
+            "deadline_missed": self.deadline_missed,
+            "executor_retries": self.executor_retries,
+            "fallback_frames": self.fallback_frames,
             "frames_in_flight": self.in_flight,
+            "reconciliation": self.reconcile(),
             "batches": self.batches,
             "mean_batch_fill": self.batch_fill.mean,
             "fps_wall": self.frames_completed / wall if wall > 0 else 0.0,
@@ -109,6 +163,8 @@ class EngineMetrics:
                             if self.execute_s > 0 else 0.0),
             "latency": self.latency_s.snapshot(),
             "queue_wait": self.queue_wait_s.snapshot(),
+            "retry_backoff": self.retry_backoff_s.snapshot(),
+            "deadline_miss": self.deadline_miss_s.snapshot(),
             "vmem_high_water_bytes": self.vmem_high_water,
             "per_pipeline": dict(self.per_pipeline),
             "rows_per_step_seen": sorted(self.rows_per_step_seen),

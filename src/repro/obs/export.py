@@ -20,6 +20,7 @@ the tools that read timelines:
 """
 from __future__ import annotations
 
+import bisect
 import json
 import os
 
@@ -28,6 +29,9 @@ import numpy as np
 from .trace import TraceEvent
 
 SCHEMA = "obs_trace/v1"
+
+# backoff-delay buckets for the SLO view's retry histogram (seconds)
+BACKOFF_BUCKETS_S = (0.001, 0.002, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25)
 
 
 # ------------------------------------------------------------------ export
@@ -126,6 +130,93 @@ def validate_trace(data) -> list[str]:
                     errs.append(f"{where}: {k} must be a number >= 0, "
                                 f"got {v!r}")
     return errs
+
+
+# --------------------------------------------------------------------- slo
+def slo_summary(data: dict) -> dict:
+    """SLO view of a trace: the control-plane story the flame summary
+    cannot tell. Reads the resilience spans (``resilience.reject/shed/
+    retry/fallback``) and the engines' ``engine.step`` delivery
+    attributes to compute the deadline-miss rate, the shed and reject
+    breakdowns by reason, the retry/backoff-delay histogram, and the
+    fallback count by rung — all from a trace *file*, no live process
+    needed."""
+    delivered = missed = failed = 0
+    rejects: dict[str, int] = {}
+    sheds: dict[str, int] = {}
+    fallbacks: dict[str, int] = {}
+    delays: list[float] = []
+    for e in _span_rows(data):
+        a = e.get("args") or {}
+        name = e["name"]
+        if name == "engine.step":
+            delivered += int(a.get("delivered", a.get("n_frames", 0)))
+            missed += int(a.get("deadline_missed", 0))
+            failed += int(a.get("failed", 0))
+        elif name == "resilience.reject":
+            r = str(a.get("reason", "?"))
+            rejects[r] = rejects.get(r, 0) + 1
+        elif name == "resilience.shed":
+            r = str(a.get("reason", "?"))
+            sheds[r] = sheds.get(r, 0) + 1
+        elif name == "resilience.retry":
+            delays.append(float(a.get("delay_s", 0.0)))
+        elif name == "resilience.fallback":
+            r = str(a.get("rung", "?"))
+            fallbacks[r] = fallbacks.get(r, 0) + 1
+    counts = [0] * (len(BACKOFF_BUCKETS_S) + 1)
+    for d in delays:
+        counts[bisect.bisect_left(BACKOFF_BUCKETS_S, d)] += 1
+    buckets = {f"le_{b:g}s": c for b, c in zip(BACKOFF_BUCKETS_S, counts)}
+    buckets["inf"] = counts[-1]
+    return {
+        "delivered": delivered,
+        "deadline_missed": missed,
+        "deadline_miss_rate": missed / delivered if delivered else 0.0,
+        "failed": failed,
+        "rejected": {"total": sum(rejects.values()), "by_reason": rejects},
+        "shed": {"total": sum(sheds.values()), "by_reason": sheds},
+        "retries": {
+            "count": len(delays),
+            "backoff_mean_s": float(np.mean(delays)) if delays else 0.0,
+            "backoff_max_s": float(np.max(delays)) if delays else 0.0,
+            "backoff_buckets": buckets,
+        },
+        "fallbacks": {"total": sum(fallbacks.values()),
+                      "by_rung": fallbacks},
+    }
+
+
+def slo_text(data: dict) -> str:
+    """Terminal rendering of :func:`slo_summary`."""
+    s = slo_summary(data)
+
+    def reasons(d: dict) -> str:
+        items = sorted(d.items(), key=lambda kv: -kv[1])
+        return ", ".join(f"{k}={v}" for k, v in items) or "-"
+
+    lines = [
+        "SLO summary",
+        f"  delivered            {s['delivered']}",
+        f"  deadline missed      {s['deadline_missed']} "
+        f"({100.0 * s['deadline_miss_rate']:.2f}%)",
+        f"  failed               {s['failed']}",
+        f"  rejected             {s['rejected']['total']} "
+        f"({reasons(s['rejected']['by_reason'])})",
+        f"  shed                 {s['shed']['total']} "
+        f"({reasons(s['shed']['by_reason'])})",
+        f"  fallback descents    {s['fallbacks']['total']} "
+        f"(from: {reasons(s['fallbacks']['by_rung'])})",
+        f"  retries              {s['retries']['count']} "
+        f"(mean backoff {1e3 * s['retries']['backoff_mean_s']:.2f} ms, "
+        f"max {1e3 * s['retries']['backoff_max_s']:.2f} ms)",
+    ]
+    if s["retries"]["count"]:
+        lines.append("  backoff histogram    "
+                     + ", ".join(f"{k}={v}" for k, v in
+                                 s["retries"]["backoff_buckets"].items()
+                                 if v))
+    return "\n".join(lines)
 
 
 # ------------------------------------------------------------------- flame

@@ -22,10 +22,13 @@ a private registry; passing one shared registry to all of them is what
 makes a process-wide telemetry plane — every subsystem's metrics under
 one scrape, disambiguated by prefix.
 
-Metric updates take the registry lock only at creation; observes touch
-per-metric state under the GIL like the plain-int counters they replace
-(the engines are single-threaded control loops — same contract as
-before, now stated).
+Metric updates take the registry lock only at creation. Mutators with
+multi-field invariants — ``Histogram.observe`` (bucket/count/sum must
+agree for the Prometheus exposition), ``Counter.inc``, ``Gauge.set_max``
+— take a per-metric lock so worker threads (retry timeouts, the chaos
+harness, stress tests) can write concurrently; the engines' attribute
+idiom (``metrics.frames_submitted += 1`` routed to ``counter.value``)
+remains a single-threaded-control-loop contract as before.
 """
 from __future__ import annotations
 
@@ -47,31 +50,38 @@ def _prom_name(name: str) -> str:
 
 
 class Counter:
-    __slots__ = ("name", "help", "value")
+    __slots__ = ("name", "help", "value", "_lock")
 
     def __init__(self, name: str, help: str = ""):
         self.name = name
         self.help = help
         self.value = 0
+        self._lock = threading.Lock()
 
     def inc(self, n=1) -> None:
-        self.value += n
+        # locked: inc() is the concurrent-writer API (worker threads,
+        # the chaos harness); direct ``value`` writes remain the
+        # single-threaded engine-loop idiom
+        with self._lock:
+            self.value += n
 
 
 class Gauge:
-    __slots__ = ("name", "help", "value")
+    __slots__ = ("name", "help", "value", "_lock")
 
     def __init__(self, name: str, help: str = ""):
         self.name = name
         self.help = help
         self.value = 0
+        self._lock = threading.Lock()
 
     def set(self, v) -> None:
         self.value = v
 
     def set_max(self, v) -> None:
         """High-water update — the VMEM-footprint idiom."""
-        self.value = max(self.value, v)
+        with self._lock:
+            self.value = max(self.value, v)
 
 
 class Histogram:
@@ -83,7 +93,7 @@ class Histogram:
     (count/mean/max/min) exact, so migrated engine metrics lose nothing.
     """
     __slots__ = ("name", "help", "buckets", "counts", "count", "total",
-                 "min", "max")
+                 "min", "max", "_lock")
 
     def __init__(self, name: str, buckets=DEFAULT_TIME_BUCKETS,
                  help: str = ""):
@@ -99,13 +109,18 @@ class Histogram:
         self.total = 0.0
         self.min = float("inf")
         self.max = 0.0
+        self._lock = threading.Lock()
 
     def observe(self, x: float) -> None:
-        self.counts[bisect.bisect_left(self.buckets, x)] += 1
-        self.count += 1
-        self.total += x
-        self.min = min(self.min, x)
-        self.max = max(self.max, x)
+        # locked so concurrent writers can't tear the count/sum/bucket
+        # triple: the exposition invariant (sum of buckets == count)
+        # must hold under a mid-scrape snapshot from another thread
+        with self._lock:
+            self.counts[bisect.bisect_left(self.buckets, x)] += 1
+            self.count += 1
+            self.total += x
+            self.min = min(self.min, x)
+            self.max = max(self.max, x)
 
     @property
     def mean(self) -> float:
@@ -131,12 +146,15 @@ class Histogram:
         return self.max  # pragma: no cover - rank <= count always crosses
 
     def snapshot(self) -> dict:
-        return {"count": self.count, "mean": self.mean,
-                "max": self.max if self.count else 0.0,
-                "min": self.min if self.count else 0.0,
-                "p50": self.percentile(50.0),
-                "p95": self.percentile(95.0),
-                "p99": self.percentile(99.0)}
+        # one lock hold for the whole stat dict so count/mean/percentiles
+        # describe the same instant even while writers keep observing
+        with self._lock:
+            return {"count": self.count, "mean": self.mean,
+                    "max": self.max if self.count else 0.0,
+                    "min": self.min if self.count else 0.0,
+                    "p50": self.percentile(50.0),
+                    "p95": self.percentile(95.0),
+                    "p99": self.percentile(99.0)}
 
 
 class MetricsRegistry:
@@ -194,11 +212,17 @@ class MetricsRegistry:
                 lines.append(f"{pname} {m.value}")
             else:
                 lines.append(f"# TYPE {pname} histogram")
+                # read the (counts, count, total) triple under the
+                # histogram's own lock: a scrape racing observe() must
+                # still satisfy sum(buckets) == count
+                with m._lock:
+                    counts = list(m.counts)
+                    count, total = m.count, m.total
                 cum = 0
-                for bound, c in zip(m.buckets, m.counts):
+                for bound, c in zip(m.buckets, counts):
                     cum += c
                     lines.append(f'{pname}_bucket{{le="{bound:g}"}} {cum}')
-                lines.append(f'{pname}_bucket{{le="+Inf"}} {m.count}')
-                lines.append(f"{pname}_sum {m.total}")
-                lines.append(f"{pname}_count {m.count}")
+                lines.append(f'{pname}_bucket{{le="+Inf"}} {count}')
+                lines.append(f"{pname}_sum {total}")
+                lines.append(f"{pname}_count {count}")
         return "\n".join(lines) + ("\n" if lines else "")

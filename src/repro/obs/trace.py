@@ -123,9 +123,15 @@ class Tracer:
         self.enabled = enabled
         self.capacity = capacity
         self.epoch_ns = time.perf_counter_ns()
+        self.dropped = 0          # events pushed out of a full ring
         self._events: deque[TraceEvent] = deque(maxlen=capacity)
         self._lock = threading.Lock()
         self._local = threading.local()
+
+    def now(self) -> float:
+        """Seconds on this tracer's clock — the span timebase. Deadline
+        stamps taken here line up with span timestamps in the export."""
+        return (time.perf_counter_ns() - self.epoch_ns) / 1e9
 
     # ------------------------------------------------------------ recording
     def _stack(self) -> list:
@@ -136,6 +142,8 @@ class Tracer:
 
     def _record(self, event: TraceEvent) -> None:
         with self._lock:
+            if len(self._events) == self.capacity:
+                self.dropped += 1      # overflow accounting: oldest falls off
             self._events.append(event)
 
     def span(self, name: str, xla: bool = False, **attrs):
@@ -172,6 +180,7 @@ class Tracer:
     def clear(self) -> None:
         with self._lock:
             self._events.clear()
+            self.dropped = 0
 
     def events(self) -> list[TraceEvent]:
         """Snapshot of the ring, oldest first (span *completion* order)."""
@@ -221,3 +230,10 @@ def events() -> list[TraceEvent]:
 
 def enabled() -> bool:
     return _GLOBAL.enabled
+
+
+def now() -> float:
+    """Module-level obs clock: seconds on the global tracer's timebase.
+    The serving control plane stamps SLA deadlines through here so
+    deadline misses align with span timestamps in the trace viewer."""
+    return _GLOBAL.now()

@@ -38,6 +38,26 @@ class BoundedFifo:
     def peek(self) -> Any:
         return self._q[0]
 
+    def remove(self, item: Any) -> None:
+        """Remove a specific resident item (identity match) — the
+        shed-on-overload eviction path: the control plane picks a
+        victim by priority/deadline, then pulls it out of the middle."""
+        for i, it in enumerate(self._q):
+            if it is item:
+                del self._q[i]
+                return
+        raise ValueError("item not in queue")
+
+    def drain(self) -> list:
+        """Pop everything, FIFO order — cancelling a closed stream's
+        queue, or sweeping deadline-expired work for re-filtering."""
+        items = list(self._q)
+        self._q.clear()
+        return items
+
+    def __iter__(self):
+        return iter(self._q)
+
     def __len__(self) -> int:
         return len(self._q)
 

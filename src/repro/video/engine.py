@@ -25,22 +25,50 @@ wants only fully-warmed output can drop them.
 up to ``chunk`` frames in one executor call when the pipeline's temporal
 taps are input-only (the common case; see make_video_executor), falling
 back to frame-at-a-time for pipelines with internal temporal producers.
+
+**Resilient mode** (``resilience=ResilienceConfig(...)``) adds the
+serving control plane: malformed/unknown-stream frames come back as
+structured :class:`~repro.resilience.RejectedFrame` results instead of
+raising, per-stream token buckets rate-limit admission, saturated
+queues shed the most-expired resident, deadlines sweep expired work,
+and execution descends a fallback ladder (tuned → default → pure-jnp
+reference). The reference rung is the interesting one for a *stateful*
+engine: each session keeps a host-side window of its last
+``warmup_frames`` raw input frames, so the oracle can recompute the
+stream's tail and hand back both the outputs and a rebuilt frame-ring
+state — the device resumes the stream exactly where the oracle left it.
+Dropped (shed) frames simply never happened to the stream: rings and
+history advance only on served frames, which is precisely live-video
+frame-dropping semantics.
+
+In both modes an executor exception can no longer strand queued work:
+frames that reached the executor but could not be served are delivered
+as structured :class:`FailedFrame` results and the session state is
+left at the last successfully served frame.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import time
+from collections import deque
 from typing import Mapping
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.algorithms import execute_reference_video
 from repro.imaging.metrics import EngineMetrics
 from repro.imaging.plan_cache import PlanCache
 from repro.imaging.tiling import rows_per_step_for_tile
+from repro.kernels import ref
 from repro.kernels.stencil_pipeline import init_frame_state
 from repro.obs import trace
+from repro.resilience import (AdmissionController, CancelledFrame,
+                              FailedFrame, FallbackLadder, LadderExhausted,
+                              Priority, RejectedFrame, ResilienceConfig,
+                              ShedFrame, overdue_s, pick_shed_victim,
+                              screen_frames, split_expired)
 from repro.serve.scheduling import BoundedFifo, assemble_batch
 
 
@@ -50,6 +78,11 @@ class VideoFrame:
     stream: int
     frames: Mapping[str, np.ndarray]
     submitted_at: float = 0.0             # stamped by the engine
+    priority: int = Priority.NORMAL       # stamped from the session
+    deadline_s: float | None = None       # relative SLA; None = config's
+    deadline: float | None = None         # absolute (obs clock), stamped
+    rid: int | None = None                # optional client tag, echoed in
+                                          # every outcome for accounting
 
 
 @dataclasses.dataclass
@@ -60,6 +93,9 @@ class CompletedVideoFrame:
     output: jnp.ndarray
     warm: bool                            # False while zero history shows
     latency_s: float
+    rung: str = "default"                 # ladder rung that served it
+    deadline_missed: bool = False
+    rid: int | None = None                # echo of VideoFrame.rid
 
 
 @dataclasses.dataclass
@@ -73,6 +109,11 @@ class VideoSession:
     queue: BoundedFifo
     warmup_frames: int
     inputs: frozenset                     # required input-stage names
+    priority: int = Priority.NORMAL
+    # resilient mode, temporal DAGs only: last ``warmup_frames`` raw
+    # input frames (oldest -> newest) per input stage — the window the
+    # reference fallback rung replays to serve off the compiled path
+    history: dict[str, deque] | None = None
     submitted: int = 0
     delivered: int = 0
     opened_at: float = dataclasses.field(
@@ -85,17 +126,20 @@ class VideoEngine:
                  chunk: int = 4, max_pending: int = 64,
                  rows_per_step: int = 8,
                  autotune: bool = False,
-                 registry=None):
+                 registry=None,
+                 resilience: ResilienceConfig | None = None):
         # ``registry``: a shared obs.MetricsRegistry for the serving
         # telemetry plane; default = a private one per engine
         self.cache = cache if cache is not None else \
-            PlanCache(registry=registry)
+            PlanCache(registry=registry,
+                      retry=resilience.retry if resilience else None)
         self.chunk = chunk
         self.max_pending = max_pending
         self.rows_per_step = rows_per_step
         # opt-in: stream through the cache's autotuned memory config (one
         # memoized design-space search per (pipeline, width))
         self.autotune = autotune
+        self.resilience = resilience
         self._sessions: dict[int, VideoSession] = {}
         self._ids = itertools.count()
         self.metrics = EngineMetrics(registry=registry,
@@ -103,37 +147,81 @@ class VideoEngine:
         self.warmup_latency_s = self.metrics.registry.histogram(
             "video_engine_warmup_latency_s",
             help="stream open -> first fully-warm output, seconds")
+        self._shed_outbox: list[ShedFrame] = []
+        if resilience is not None:
+            self._admission = AdmissionController(
+                resilience.rate, resilience.burst, clock=trace.now)
+            self._ladder = FallbackLadder(
+                retry=resilience.retry,
+                failure_threshold=resilience.breaker_failures,
+                reset_after_s=resilience.breaker_reset_s,
+                on_retry=lambda a, d, e: self.metrics.observe_retry(d))
+        else:
+            self._admission = None
+            self._ladder = None
 
     # ------------------------------------------------------------- streams
-    def open_stream(self, pipeline: str, h: int, w: int) -> int:
+    def open_stream(self, pipeline: str, h: int, w: int,
+                    priority: int = Priority.NORMAL) -> int:
         """Create a session: zeroed frame rings, empty queue. Executors
         compile lazily on the first step — opening a stream costs only
         the zero-state allocation."""
         dag = self.cache.dag_for(pipeline)
         sid = next(self._ids)
+        warmup = dag.cumulative_extent(temporal=True)[0]
+        history = None
+        if self.resilience is not None and dag.is_temporal():
+            history = {name: deque(maxlen=warmup)
+                       for name in dag.input_stages()}
         self._sessions[sid] = VideoSession(
             sid=sid, pipeline=pipeline, h=h, w=w,
             state=init_frame_state(dag.temporal_depths(), h, w),
             queue=BoundedFifo(self.max_pending),
-            warmup_frames=dag.cumulative_extent(temporal=True)[0],
-            inputs=frozenset(dag.input_stages()))
+            warmup_frames=warmup,
+            inputs=frozenset(dag.input_stages()),
+            priority=int(priority), history=history)
         return sid
 
-    def close_stream(self, sid: int) -> None:
+    def close_stream(self, sid: int,
+                     cancel: bool = False) -> list[CancelledFrame]:
+        """Tear down a session. A queue with undelivered frames refuses
+        (raises) by default — closing must not silently race in-flight
+        work. ``cancel=True`` drains those frames as structured
+        :class:`CancelledFrame` results instead, keeping the
+        reconciliation identity exact (they count as cancelled, not
+        lost)."""
         s = self._sessions[sid]
+        cancelled: list[CancelledFrame] = []
         if s.queue:
-            raise ValueError(f"stream {sid} closed with {len(s.queue)} "
-                             f"undelivered frames")
+            if not cancel:
+                raise ValueError(f"stream {sid} closed with {len(s.queue)} "
+                                 f"undelivered frames")
+            dropped = s.queue.drain()
+            self.metrics.frames_cancelled += len(dropped)
+            cancelled = [CancelledFrame(pipeline=s.pipeline, stream=sid,
+                                        rid=f.rid)
+                         for f in dropped]
+            with trace.span("resilience.cancel", engine="video",
+                            stream=sid, pipeline=s.pipeline,
+                            n_frames=len(dropped)):
+                pass
+        if self._admission is not None:
+            self._admission.forget(sid)
         del self._sessions[sid]
+        return cancelled
 
     @property
     def pending(self) -> int:
         return sum(len(s.queue) for s in self._sessions.values())
 
     # ----------------------------------------------------------- admission
-    def submit(self, frame: VideoFrame) -> bool:
+    def submit(self, frame: VideoFrame) -> bool | RejectedFrame:
         """Enqueue one frame; False = stream saturated (backpressure).
-        Malformed frames raise here, at admission."""
+        Legacy strict mode raises on malformed frames here, at
+        admission; resilient mode returns a falsy RejectedFrame for
+        every refusal instead."""
+        if self.resilience is not None:
+            return self._submit_resilient(frame)
         s = self._sessions.get(frame.stream)
         if s is None:
             raise KeyError(f"unknown stream {frame.stream}")
@@ -147,6 +235,7 @@ class VideoEngine:
                     f"stream {s.sid}: frame shape "
                     f"{tuple(np.shape(frame.frames[n]))} != ({s.h}, {s.w})")
         frame.submitted_at = time.perf_counter()
+        self.metrics.frames_offered += 1
         ok = s.queue.push(frame)
         if ok:
             s.submitted += 1
@@ -155,29 +244,270 @@ class VideoEngine:
             self.metrics.frames_rejected += 1
         return ok
 
-    # ----------------------------------------------------------------- step
-    def _executor(self, pipeline: str, h: int, w: int, n: int):
-        """Cached executor advancing ``n`` frames: the full-chunk batched
-        variant when the DAG supports it (input-only temporal taps) and
-        the batch is full, else single-frame. Partial chunks run frame-
-        at-a-time rather than compiling one executor per fill level —
-        at most two compiled variants ({1, chunk}) per pipeline/shape."""
-        rps = rows_per_step_for_tile(h, self.rows_per_step)
-        dag = self.cache.dag_for(pipeline)
-        inputs = set(dag.input_stages())
-        chunkable = all(p in inputs for p in dag.temporal_depths())
-        chunk = n if (n == self.chunk and n > 1 and chunkable) else None
-        return self.cache.video_executor_for(pipeline, h, w, chunk=chunk,
-                                             rows_per_step=rps,
-                                             tune=self.autotune)
+    def _reject(self, rej: RejectedFrame) -> RejectedFrame:
+        self.metrics.frames_rejected += 1
+        with trace.span("resilience.reject", engine="video",
+                        pipeline=rej.pipeline or "?", reason=rej.reason,
+                        retryable=rej.retryable):
+            pass
+        return rej
 
-    def step(self) -> list[CompletedVideoFrame]:
-        """Serve up to ``chunk`` frames of the neediest stream; [] idle."""
+    def _shed(self, frame: VideoFrame, reason: str, now: float,
+              s: VideoSession) -> None:
+        self.metrics.frames_shed += 1
+        od = overdue_s(frame.deadline, now)
+        self._shed_outbox.append(ShedFrame(
+            reason=reason, pipeline=s.pipeline,
+            priority=int(frame.priority), stream=s.sid, rid=frame.rid,
+            deadline=frame.deadline,
+            overdue_s=od if od > float("-inf") else 0.0))
+        with trace.span("resilience.shed", engine="video",
+                        pipeline=s.pipeline, stream=s.sid, reason=reason,
+                        priority=int(frame.priority)):
+            pass
+
+    def _submit_resilient(self, frame: VideoFrame) -> bool | RejectedFrame:
+        self.metrics.frames_offered += 1
+        s = self._sessions.get(frame.stream)
+        if s is None:
+            return self._reject(RejectedFrame(
+                "unknown_stream", stream=frame.stream,
+                detail=f"no open stream {frame.stream}"))
+        defect = screen_frames(frame.frames, s.inputs,
+                               expect_shape=(s.h, s.w))
+        if defect is not None:
+            reason, detail = defect
+            return self._reject(RejectedFrame(
+                reason, pipeline=s.pipeline, detail=detail,
+                stream=s.sid))
+        if not self._admission.allow(s.sid):
+            return self._reject(RejectedFrame(
+                "rate_limited", pipeline=s.pipeline, retryable=True,
+                stream=s.sid))
+        cfg = self.resilience
+        now = trace.now()
+        frame.submitted_at = time.perf_counter()
+        frame.priority = int(s.priority)
+        dl = frame.deadline_s if frame.deadline_s is not None \
+            else cfg.default_deadline_s
+        frame.deadline = (now + dl) if dl is not None else None
+        q = s.queue
+        if len(q) >= q.capacity and cfg.shed_on_overload:
+            # within one stream every frame shares the session priority,
+            # so eviction here only ever claims an expired resident —
+            # classic live-video frame dropping, never reordering
+            victim = pick_shed_victim(
+                q, int(frame.priority), now,
+                priority_of=lambda f: int(f.priority),
+                deadline_of=lambda f: f.deadline,
+                age_of=lambda f: f.submitted_at)
+            if victim is not None:
+                q.remove(victim)
+                self._shed(victim, "overload", now, s)
+        if not q.push(frame):
+            return self._reject(RejectedFrame(
+                "saturated", pipeline=s.pipeline, retryable=True,
+                stream=s.sid))
+        s.submitted += 1
+        self.metrics.frames_submitted += 1
+        return True
+
+    def _sweep_expired(self) -> None:
+        now = trace.now()
+        for s in self._sessions.values():
+            if not s.queue:
+                continue
+            live, expired = split_expired(s.queue.drain(), now,
+                                          lambda f: f.deadline)
+            for f in live:
+                s.queue.push(f)
+            for f in expired:
+                self._shed(f, "deadline", now, s)
+
+    # ------------------------------------------------------------ execution
+    @property
+    def _primary_rung(self) -> str:
+        return "tuned" if self.autotune else "default"
+
+    def _run_chunk(self, s: VideoSession, frames: list[VideoFrame],
+                   n: int, rps: int, tune: bool):
+        """Full-chunk executor call. Returns (outs, new_state, vmem);
+        crucially does NOT touch ``s.state`` — the caller commits state
+        only on success, so a failed rung leaves the stream resumable."""
+        ex = self.cache.video_executor_for(s.pipeline, s.h, s.w, chunk=n,
+                                           rows_per_step=rps,
+                                           tune=tune)
+        with trace.span("engine.assemble", pipeline=s.pipeline):
+            ins = {name: jnp.stack(
+                [jnp.asarray(f.frames[name], jnp.float32) for f in frames])
+                for name in s.inputs}
+        with trace.span("engine.execute", pipeline=s.pipeline, xla=True):
+            out, new_state = ex(ins, s.state)
+            out.block_until_ready()
+        return ([out[i] for i in range(n)], new_state,
+                ex.vmem_bytes + ex.frame_state_bytes)
+
+    def _run_frame(self, s: VideoSession, f: VideoFrame,
+                   rps: int, tune: bool):
+        """Single-frame executor call; same no-state-mutation contract."""
+        ex = self.cache.video_executor_for(s.pipeline, s.h, s.w, chunk=None,
+                                           rows_per_step=rps,
+                                           tune=tune)
+        with trace.span("engine.execute", pipeline=s.pipeline, xla=True):
+            out, new_state = ex(f.frames, s.state)
+            out.block_until_ready()
+        return [out], new_state, ex.vmem_bytes + ex.frame_state_bytes
+
+    def _reference_serve(self, s: VideoSession, frames: list[VideoFrame]):
+        """The ladder's reference rung for a *stateful* stream: replay
+        the session's host-side input window plus the new frames through
+        the pure-jnp oracle, return the tail outputs and a frame-ring
+        state rebuilt from the oracle's end-of-window history. Input
+        producers resync bitwise (the rings hold raw past inputs);
+        internal temporal producers recompute within reference accuracy.
+        """
+        dag = self.cache.dag_for(s.pipeline)
+        with trace.span("engine.execute", pipeline=s.pipeline,
+                        reference=True):
+            if not dag.is_temporal():
+                outs = [ref.stencil_pipeline_ref(
+                    dag, {k: jnp.asarray(f.frames[k], jnp.float32)
+                          for k in s.inputs}) for f in frames]
+                return outs, dict(s.state), 0
+            videos = {}
+            for k in s.inputs:
+                seq = [jnp.asarray(x, jnp.float32) for x in s.history[k]]
+                seq += [jnp.asarray(f.frames[k], jnp.float32)
+                        for f in frames]
+                videos[k] = jnp.stack(seq)
+            out, hist = execute_reference_video(dag, videos,
+                                                return_history=True)
+            new_state = self._state_from_history(
+                dag.temporal_depths(), hist, s.h, s.w)
+            outs = [out[t] for t in range(out.shape[0] - len(frames),
+                                          out.shape[0])]
+        return outs, new_state, 0
+
+    @staticmethod
+    def _state_from_history(depths: dict[str, int], hist: dict,
+                            h: int, w: int) -> dict[str, jnp.ndarray]:
+        """Frame rings from a reference history: newest-first (matching
+        the executor's ring layout), zero-padded up to d-1 when the
+        stream is younger than its temporal extent."""
+        state = {}
+        for p, d in depths.items():
+            fr = [jnp.asarray(x, jnp.float32) for x in hist.get(p, [])]
+            fr = fr[:d - 1]
+            fr += [jnp.zeros((h, w), jnp.float32)] * (d - 1 - len(fr))
+            state[p] = (jnp.stack(fr) if fr
+                        else jnp.zeros((0, h, w), jnp.float32))
+        return state
+
+    def _remember(self, s: VideoSession, frames: list[VideoFrame]) -> None:
+        """Append served frames to the session's reference window. Only
+        served frames: the window must mirror the effective stream the
+        device rings saw, and shed/failed frames never happened to it."""
+        if s.history is None:
+            return
+        for k in s.inputs:
+            for f in frames:
+                s.history[k].append(np.asarray(f.frames[k], np.float32))
+
+    def _rungs(self, s: VideoSession, frames: list[VideoFrame],
+               make_compiled):
+        rungs = []
+        if self.autotune:
+            rungs.append(("tuned", make_compiled(True)))
+        rungs.append(("default", make_compiled(False)))
+        if self.resilience.reference_fallback:
+            rungs.append(("reference",
+                          lambda: self._reference_serve(s, frames)))
+        return rungs
+
+    def _execute_stream(self, s: VideoSession, frames: list[VideoFrame]):
+        """Serve ``frames`` (in order) against the session. Returns
+        (served, failed, vmem, rps) with served = [(frame, out, rung)]
+        and failed = [(frame, error_str)]; session state advances only
+        over the served prefix/frames."""
+        n = len(frames)
+        dag = self.cache.dag_for(s.pipeline)
+        rps = rows_per_step_for_tile(s.h, self.rows_per_step)
+        chunkable = all(p in s.inputs for p in dag.temporal_depths())
+        use_chunk = n == self.chunk and n > 1 and chunkable
+        served: list = []
+        failed: list = []
+        vmem = 0
+        if self.resilience is None:
+            # strict mode: primary path only, but an executor exception
+            # becomes structured failures for the unserved frames
+            # instead of escaping with the batch already popped
+            try:
+                if use_chunk:
+                    outs, new_state, vmem = self._run_chunk(
+                        s, frames, n, rps, self.autotune)
+                    s.state = new_state
+                    served = [(f, o, self._primary_rung)
+                              for f, o in zip(frames, outs)]
+                else:
+                    for f in frames:
+                        outs, new_state, vm = self._run_frame(
+                            s, f, rps, self.autotune)
+                        s.state = new_state
+                        vmem = max(vmem, vm)
+                        served.append((f, outs[0], self._primary_rung))
+            except Exception as e:  # noqa: BLE001 - structured failure
+                err = repr(e)
+                failed = [(f, err) for f in frames[len(served):]]
+            return served, failed, vmem, rps
+
+        if use_chunk:
+            rungs = self._rungs(
+                s, frames,
+                lambda tune: (lambda: self._run_chunk(s, frames, n, rps,
+                                                      tune)))
+            try:
+                (outs, new_state, vmem), rung = self._ladder.run(
+                    (s.pipeline, "chunk"), rungs)
+            except LadderExhausted as e:
+                return [], [(f, repr(e)) for f in frames], 0, rps
+            s.state = new_state
+            self._remember(s, frames)
+            served = [(f, o, rung) for f, o in zip(frames, outs)]
+            return served, failed, vmem, rps
+
+        for f in frames:
+            rungs = self._rungs(
+                s, [f],
+                lambda tune, f=f: (lambda: self._run_frame(s, f, rps,
+                                                           tune)))
+            try:
+                (outs, new_state, vm), rung = self._ladder.run(
+                    (s.pipeline, "frame"), rungs)
+            except LadderExhausted as e:
+                failed.append((f, repr(e)))
+                continue    # state untouched: the stream skips this frame
+            s.state = new_state
+            vmem = max(vmem, vm)
+            self._remember(s, [f])
+            served.append((f, outs[0], rung))
+        return served, failed, vmem, rps
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> list:
+        """Serve up to ``chunk`` frames of the neediest stream; flushes
+        pending shed outcomes first. Returns a mix of
+        CompletedVideoFrame, ShedFrame, and FailedFrame ([] when idle).
+        """
+        results: list = []
+        if self.resilience is not None and self.resilience.shed_expired:
+            self._sweep_expired()
+        if self._shed_outbox:
+            results, self._shed_outbox = self._shed_outbox, []
         live = {sid: s.queue for sid, s in self._sessions.items()}
         sid, frames = assemble_batch(live, self.chunk,
                                      age_of=lambda f: f.submitted_at)
         if not frames:
-            return []
+            return results
         s = self._sessions[sid]
         n = len(frames)
         queue_wait = (time.perf_counter()
@@ -186,35 +516,20 @@ class VideoEngine:
         with trace.span("engine.step", engine="video", pipeline=s.pipeline,
                         stream=sid, n_frames=n,
                         queue_wait_s=queue_wait) as sp:
-            ex = self._executor(s.pipeline, s.h, s.w, n)
             t0 = time.perf_counter()
-            if ex.chunk is not None:
-                with trace.span("engine.assemble", pipeline=s.pipeline):
-                    ins = {name: jnp.stack(
-                        [jnp.asarray(f.frames[name], jnp.float32)
-                         for f in frames])
-                        for name in s.inputs}
-                with trace.span("engine.execute", pipeline=s.pipeline,
-                                xla=True):
-                    out, s.state = ex(ins, s.state)
-                    out.block_until_ready()
-                outs = [out[i] for i in range(n)]
-            else:
-                with trace.span("engine.execute", pipeline=s.pipeline,
-                                xla=True):
-                    outs = []
-                    for f in frames:
-                        o, s.state = ex(f.frames, s.state)
-                        outs.append(o)
-                    outs[-1].block_until_ready()
+            served, failed, vmem, rps = self._execute_stream(s, frames)
             dt = time.perf_counter() - t0
-            sp.set(execute_s=dt, chunked=ex.chunk is not None)
-        self.metrics.observe_batch(s.pipeline, n, self.chunk, dt,
-                                   ex.vmem_bytes + ex.frame_state_bytes,
-                                   rows_per_step=ex.rows_per_step)
-        done: list[CompletedVideoFrame] = []
+            sp.set(execute_s=dt, delivered=len(served), failed=len(failed))
+        if served:
+            self.metrics.observe_batch(s.pipeline, len(served), self.chunk,
+                                       dt, vmem, rows_per_step=rps)
+            self.metrics.fallback_frames += sum(
+                1 for _, _, rung in served if rung != self._primary_rung)
+        if failed:
+            self.metrics.frames_failed += len(failed)
         now = time.perf_counter()
-        for f, out in zip(frames, outs):
+        now_obs = trace.now()
+        for f, out, rung in served:
             idx = s.delivered
             s.delivered += 1
             warm = idx >= s.warmup_frames
@@ -223,10 +538,18 @@ class VideoEngine:
                 self.warmup_latency_s.observe(now - s.opened_at)
             lat = now - f.submitted_at
             self.metrics.observe_latency(lat)
-            done.append(CompletedVideoFrame(
+            late = f.deadline is not None and now_obs > f.deadline
+            if late:
+                self.metrics.observe_deadline_miss(now_obs - f.deadline)
+            results.append(CompletedVideoFrame(
                 stream=sid, pipeline=s.pipeline, index=idx, output=out,
-                warm=warm, latency_s=lat))
-        return done
+                warm=warm, latency_s=lat, rung=rung, deadline_missed=late,
+                rid=f.rid))
+        for f, err in failed:
+            results.append(FailedFrame(
+                pipeline=s.pipeline, error=err, stream=sid, rid=f.rid,
+                latency_s=now - f.submitted_at))
+        return results
 
     def run(self, streams: Mapping[int, list[Mapping[str, np.ndarray]]]
             ) -> dict[int, list[jnp.ndarray]]:
@@ -235,16 +558,36 @@ class VideoEngine:
         globally neediest stream, so frames already queued on sessions
         *outside* ``streams`` may complete during the drain; they are
         returned under their own stream id rather than dropped, and only
-        the requested streams' queues gate termination."""
+        the requested streams' queues gate termination. In resilient
+        mode, permanently rejected frames are dropped from the feed
+        (their structured outcomes are not collected here — drive
+        ``submit``/``step`` directly for per-frame accounting)."""
         pending = {sid: list(frames) for sid, frames in streams.items()}
         results: dict[int, list] = {sid: [] for sid in streams}
-        while (any(pending.values())
-               or any(self._sessions[sid].queue for sid in streams)):
+
+        def queued(sid: int) -> bool:
+            s = self._sessions.get(sid)
+            return bool(s and s.queue)
+
+        while any(pending.values()) or any(queued(sid) for sid in streams):
+            progressed = False
             for sid, frames in pending.items():
-                while frames and self.submit(VideoFrame(sid, frames[0])):
-                    frames.pop(0)
+                while frames:
+                    r = self.submit(VideoFrame(sid, frames[0]))
+                    if r is True:
+                        frames.pop(0)
+                        progressed = True
+                    elif isinstance(r, RejectedFrame) and not r.retryable:
+                        frames.pop(0)       # permanent: skip the frame
+                        progressed = True
+                    else:
+                        break
             for c in self.step():
-                results.setdefault(c.stream, []).append(c.output)
+                progressed = True
+                if isinstance(c, CompletedVideoFrame):
+                    results.setdefault(c.stream, []).append(c.output)
+            if not progressed:
+                time.sleep(0.001)  # rate-limit window: don't spin hot
         return results
 
     def snapshot(self) -> dict:

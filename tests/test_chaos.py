@@ -1,0 +1,161 @@
+"""Seeded fault injection: the chaos harness itself, then a miniature
+soak proving the control plane holds the accounting identity under it."""
+import numpy as np
+import pytest
+
+from repro.imaging import FrameEngine, FrameRequest, PlanCache
+from repro.kernels import ref
+from repro.resilience import (RejectedFrame, ResilienceConfig, RetryPolicy,
+                              screen_frames)
+from repro.resilience.chaos import (FAULT_KINDS, ChaosExecutor,
+                                    ChaosMonkey, InjectedFault,
+                                    install_chaos)
+
+RNG = np.random.RandomState(21)
+
+
+def _frame(shape=(16, 24)):
+    return RNG.rand(*shape).astype(np.float32)
+
+
+def test_monkey_rejects_unknown_fault_kinds():
+    with pytest.raises(ValueError, match="unknown fault kinds"):
+        ChaosMonkey(seed=0, meteor_strike=1.0)
+    m = ChaosMonkey(seed=0)
+    assert set(m.rates) == set(FAULT_KINDS)
+    assert all(v == 0.0 for v in m.rates.values())
+
+
+def test_monkey_is_deterministic_per_seed():
+    def drive(seed):
+        m = ChaosMonkey(seed=seed, compile=0.3, executor=0.2,
+                        nan_frame=0.1)
+        hits = [m.roll(k) for _ in range(200)
+                for k in ("compile", "executor", "nan_frame")]
+        return hits, dict(m.injected)
+
+    h1, c1 = drive(5)
+    h2, c2 = drive(5)
+    h3, c3 = drive(6)
+    assert h1 == h2 and c1 == c2          # same seed replays bit-for-bit
+    assert h1 != h3                       # different seed, different run
+    assert sum(c1.values()) == sum(h1)
+
+
+def test_corrupt_produces_screenable_defects():
+    m = ChaosMonkey(seed=3, nan_frame=1.0)
+    clean = {"in": _frame()}
+    bad, kind = m.corrupt(clean)
+    assert kind == "nan_frame"
+    assert screen_frames(bad, {"in"})[0] == "nonfinite"
+    assert np.isfinite(clean["in"]).all()         # original untouched
+
+    m = ChaosMonkey(seed=3, shape_frame=1.0)
+    bad, kind = m.corrupt(clean)
+    assert kind == "shape_frame"
+    assert screen_frames(bad, {"in"})[0] == "bad_shape"
+
+    m = ChaosMonkey(seed=3, dtype_frame=1.0)
+    bad, kind = m.corrupt(clean)
+    assert kind == "dtype_frame"
+    assert screen_frames(bad, {"in"})[0] == "bad_dtype"
+
+    # at most one corruption even with every rate maxed: the first
+    # defect wins so reason accounting stays unambiguous
+    m = ChaosMonkey(seed=3, nan_frame=1.0, shape_frame=1.0,
+                    dtype_frame=1.0)
+    bad, kind = m.corrupt(clean)
+    assert kind == "nan_frame"
+    assert m.injected["shape_frame"] == 0
+    assert m.injected["dtype_frame"] == 0
+
+    m = ChaosMonkey(seed=3)                       # all rates zero
+    same, kind = m.corrupt(clean)
+    assert kind is None
+    np.testing.assert_array_equal(same["in"], clean["in"])
+
+
+def test_chaos_executor_is_a_transparent_proxy():
+    cache = PlanCache()
+    real = cache.executor_for("unsharp-m", 16, 24, batch=2)
+    quiet = ChaosExecutor(real, ChaosMonkey(seed=0))       # rate 0
+    assert quiet.vmem_bytes == real.vmem_bytes             # attrs forward
+    x = {"in": np.stack([_frame(), _frame()])}
+    np.testing.assert_array_equal(np.asarray(quiet(x)),
+                                  np.asarray(real(x)))
+    loud = ChaosExecutor(real, ChaosMonkey(seed=0, executor=1.0))
+    with pytest.raises(InjectedFault, match="executor"):
+        loud(x)
+
+
+def test_compile_hook_fires_inside_cache_retry_boundary():
+    """An injected compile failure must be retried by the cache's own
+    policy — the seam sits inside the retry, not around it."""
+    monkey = ChaosMonkey(seed=0, compile=1.0)
+    cache = PlanCache(retry=RetryPolicy(max_attempts=3, base_delay_s=1e-4,
+                                        seed=0))
+    install_chaos(cache, monkey)
+    with pytest.raises(InjectedFault):
+        cache.executor_for("unsharp-m", 8, 8, batch=1)
+    assert monkey.injected["compile"] == 3        # one per retry attempt
+
+
+def test_evict_storm_forces_recompiles():
+    cache = PlanCache()
+    cache.executor_for("unsharp-m", 8, 8, batch=1)
+    monkey = ChaosMonkey(seed=0, evict_storm=1.0)
+    assert monkey.maybe_storm(cache) >= 1
+    assert monkey.injected["evict_storm"] == 1
+    calm = ChaosMonkey(seed=0)
+    assert calm.maybe_storm(cache) == 0
+
+
+def test_mini_soak_books_balance_and_outputs_verify():
+    """A 60-frame seeded storm through the resilient FrameEngine: every
+    offered frame accounted, every completed output matching the oracle,
+    no exception escaping — the chaos-soak gates in miniature."""
+    monkey = ChaosMonkey(seed=11, compile=0.25, executor=0.1,
+                         nan_frame=0.1, shape_frame=0.05,
+                         dtype_frame=0.05, evict_storm=0.05)
+    eng = FrameEngine(
+        max_batch=2, max_pending=8,
+        resilience=ResilienceConfig(
+            retry=RetryPolicy(max_attempts=2, base_delay_s=1e-4, seed=11),
+            breaker_failures=2, breaker_reset_s=0.05))
+    install_chaos(eng.cache, monkey)
+    dag = eng.cache.dag_for("unsharp-m")
+
+    offered = 0
+    outcomes = []
+    sent = {}
+    for rid in range(60):
+        frames, _ = monkey.corrupt({"in": _frame()})
+        monkey.maybe_storm(eng.cache)
+        r = eng.submit(FrameRequest(rid=rid, pipeline="unsharp-m",
+                                    frames=frames))
+        offered += 1
+        if isinstance(r, RejectedFrame):
+            outcomes.append(r)
+        else:
+            assert r is True
+            sent[rid] = frames
+        if rid % 3 == 2:
+            outcomes += eng.step()
+    while eng.pending:
+        outcomes += eng.step()
+    outcomes += eng.step()                        # flush any shed outbox
+
+    rec = eng.metrics.reconcile()
+    assert rec["offered"] == offered
+    assert rec["balanced"] and rec["in_flight"] == 0
+    # the client saw exactly one outcome per offered frame
+    assert len(outcomes) == offered
+    assert sorted(o.rid for o in outcomes) == list(range(60))
+    completed = [o for o in outcomes if hasattr(o, "output")]
+    assert completed                              # chaos didn't stop serving
+    for c in completed:
+        want = np.asarray(ref.stencil_pipeline_ref(dag, sent[c.rid]))
+        tol = 8 * np.spacing(np.abs(want).max())
+        np.testing.assert_allclose(np.asarray(c.output), want,
+                                   rtol=0, atol=tol)
+    assert sum(monkey.injected.values()) > 0      # the storm actually blew

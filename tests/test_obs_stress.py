@@ -1,0 +1,171 @@
+"""Observability under stress: concurrent writers vs scrapers, event-ring
+overflow accounting, and the control-plane counters' reconciliation."""
+import re
+import threading
+
+import numpy as np
+import pytest
+
+from repro.imaging.metrics import EngineMetrics
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
+
+
+def _hammer(n_threads, fn):
+    """Run fn(thread_index) on n_threads threads, re-raising any error."""
+    errs = []
+
+    def runner(k):
+        try:
+            fn(k)
+        except BaseException as e:  # noqa: BLE001 - surfaced below
+            errs.append(e)
+
+    threads = [threading.Thread(target=runner, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs
+
+
+# -------------------------------------------------------------- histograms
+def test_histogram_exact_under_concurrent_writers():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s", buckets=(0.01, 0.1, 1.0))
+    per_thread, n_threads = 2000, 8
+    rng = np.random.default_rng(0)
+    values = rng.random((n_threads, per_thread)) * 2.0
+
+    _hammer(n_threads,
+            lambda k: [h.observe(float(v)) for v in values[k]])
+
+    assert h.count == n_threads * per_thread       # no lost increment
+    assert sum(h.counts) == h.count                # no torn bucket triple
+    assert h.total == pytest.approx(float(values.sum()), rel=1e-9)
+    assert h.min == pytest.approx(float(values.min()))
+    assert h.max == pytest.approx(float(values.max()))
+    snap = h.snapshot()
+    assert snap["count"] == h.count
+    assert snap["min"] <= snap["p50"] <= snap["p95"] <= snap["p99"] \
+        <= snap["max"]
+
+
+def test_prometheus_scrape_consistent_while_writers_run():
+    """Mid-storm scrapes must still satisfy the exposition invariants:
+    cumulative buckets monotone and the +Inf bucket equal to _count."""
+    reg = MetricsRegistry()
+    h = reg.histogram("busy_s", buckets=(0.25, 0.5, 0.75))
+    c = reg.counter("hits")
+    stop = threading.Event()
+
+    def writer(k):
+        rng = np.random.default_rng(k)
+        while not stop.is_set():
+            h.observe(float(rng.random()))
+            c.inc()
+
+    threads = [threading.Thread(target=writer, args=(k,))
+               for k in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(50):
+            text = reg.to_prometheus_text()
+            cum = [int(m) for m in
+                   re.findall(r'busy_s_bucket{le="[^+]*?"} (\d+)', text)]
+            inf = int(re.search(r'busy_s_bucket{le="\+Inf"} (\d+)',
+                                text).group(1))
+            count = int(re.search(r"busy_s_count (\d+)", text).group(1))
+            assert cum == sorted(cum)              # cumulative, monotone
+            assert cum[-1] <= inf == count         # books close mid-scrape
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    final = reg.to_prometheus_text()
+    assert int(re.search(r"busy_s_count (\d+)", final).group(1)) == h.count
+    assert int(re.search(r"^hits (\d+)", final, re.M).group(1)) == c.value
+
+
+def test_counter_increments_exact_across_threads():
+    reg = MetricsRegistry()
+    c = reg.counter("n")
+    _hammer(8, lambda k: [c.inc() for _ in range(5000)])
+    assert c.value == 40000
+
+
+# ------------------------------------------------------------- event ring
+def test_event_ring_overflow_counts_drops():
+    tr = Tracer(enabled=True, capacity=16)
+    for i in range(100):
+        with tr.span(f"s{i}"):
+            pass
+    assert len(tr.events()) == 16                  # ring stayed bounded
+    assert tr.dropped == 84                        # every loss accounted
+    assert [e.name for e in tr.events()] == [f"s{i}" for i in range(84, 100)]
+    tr.clear()
+    assert tr.dropped == 0 and len(tr) == 0
+
+
+def test_event_ring_overflow_under_concurrent_spans():
+    tr = Tracer(enabled=True, capacity=32)
+    per_thread, n_threads = 500, 6
+
+    def spam(k):
+        for _ in range(per_thread):
+            with tr.span(f"t{k}"):
+                pass
+
+    _hammer(n_threads, spam)
+    total = n_threads * per_thread
+    assert len(tr.events()) == 32
+    assert tr.dropped == total - 32                # retained + dropped = all
+
+
+# --------------------------------------------------------- reconciliation
+def test_reconciliation_balances_with_control_plane_counters():
+    m = EngineMetrics(prefix="t")
+    m.frames_offered += 10
+    m.frames_submitted += 7                        # 3 rejected at the door
+    m.frames_rejected += 3
+    m.observe_batch("p", n_frames=3, slots=4, execute_s=0.01,
+                    vmem_bytes=0)                  # 3 completed
+    m.frames_shed += 1
+    m.frames_cancelled += 1
+    m.frames_failed += 1
+    rec = m.reconcile()
+    assert rec["in_flight"] == 1                   # 7 - 3 - 1 - 1 - 1
+    assert rec["accounted"] == 10 and rec["balanced"]
+    # a vanished frame — offered but never admitted, rejected, or
+    # otherwise dispositioned — breaks the identity loudly
+    m.frames_offered += 1
+    assert not m.reconcile()["balanced"]
+
+
+def test_retry_and_deadline_observations_feed_histograms():
+    m = EngineMetrics(prefix="t")
+    for d in (0.001, 0.002, 0.004):
+        m.observe_retry(d)
+    m.observe_deadline_miss(0.5)
+    m.observe_deadline_miss(-0.1)                  # clamped at zero
+    assert m.executor_retries == 3
+    assert m.deadline_missed == 2
+    snap = m.snapshot()
+    assert snap["retry_backoff"]["count"] == 3
+    assert snap["retry_backoff"]["max"] == pytest.approx(0.004)
+    assert snap["deadline_miss"]["count"] == 2
+    assert snap["deadline_miss"]["min"] == 0.0
+    # and they ride the shared registry like every other counter
+    assert m.registry.snapshot()["t_executor_retries"] == 3
+
+
+def test_concurrent_engine_counter_attributes_do_not_lose_updates():
+    """The engines mutate counters via `metrics.x += 1` property sugar;
+    that read-modify-write is NOT atomic across threads — but inc() is.
+    This pins the contract: cross-thread writers must use inc()."""
+    m = EngineMetrics(prefix="t")
+    _hammer(4, lambda k: [m._c["frames_completed"].inc()
+                          for _ in range(2500)])
+    assert m.frames_completed == 10000

@@ -3,6 +3,7 @@
     PYTHONPATH=src python tools/obs_report.py trace.json
     PYTHONPATH=src python tools/obs_report.py trace.json --top 30
     PYTHONPATH=src python tools/obs_report.py trace.json --validate
+    PYTHONPATH=src python tools/obs_report.py trace.json --slo
     PYTHONPATH=src python tools/obs_report.py trace.json --out clean.json
 
 Input is a trace emitted by any ``--trace out.json`` benchmark flag (or
@@ -16,6 +17,12 @@ ui.perfetto.dev or chrome://tracing for the interactive timeline.
 ``--validate`` exits nonzero if the file fails the exporter's schema
 check; CI runs this over the traced smoke serve so a malformed trace
 artifact can never ship silently.
+
+``--slo`` switches from the flame view to the control-plane view:
+deadline-miss rate, shed/reject breakdown by reason, fallback counts by
+rung, and the retry/backoff-delay histogram — the post-mortem of a
+chaos soak or an overloaded serve, computed entirely from the trace
+file's resilience spans.
 """
 from __future__ import annotations
 
@@ -38,6 +45,10 @@ def main(argv=None) -> int:
                     help="write a normalized copy of the trace here")
     ap.add_argument("--validate", action="store_true",
                     help="exit nonzero if the trace fails the schema check")
+    ap.add_argument("--slo", action="store_true",
+                    help="print the SLO summary (deadline misses, "
+                         "shed/reject breakdown, retry histogram) instead "
+                         "of the flame summary")
     args = ap.parse_args(argv)
 
     data = export.load_trace(args.trace)
@@ -55,7 +66,10 @@ def main(argv=None) -> int:
         print(f"{args.trace}: valid ({n} spans: {', '.join(names)})")
         return 0
 
-    print(export.flame_summary(data, top=args.top))
+    if args.slo:
+        print(export.slo_text(data))
+    else:
+        print(export.flame_summary(data, top=args.top))
 
     if args.out:
         export.write_trace(args.out, data)
