@@ -1,0 +1,6 @@
+"""Benchmark entry points (python -m benchmarks.<name>).
+
+Shared plumbing lives in :mod:`benchmarks.common`; the unified harness
+that runs any suite and feeds the BENCH_history.jsonl ledger is
+:mod:`benchmarks.perf_lab`.
+"""

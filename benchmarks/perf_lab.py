@@ -1,0 +1,376 @@
+"""Performance attribution lab: one harness for every benchmark suite.
+
+    PYTHONPATH=src python -m benchmarks.perf_lab --smoke
+    PYTHONPATH=src python -m benchmarks.perf_lab \
+        --suites perf serve video tune
+    PYTHONPATH=src python -m benchmarks.perf_lab --update-baseline
+    PYTHONPATH=src python -m benchmarks.perf_lab --inject-slowdown 2
+
+The ``perf`` suite is the model-vs-measured attribution loop: for every
+registered pipeline (image and video) it compiles the plan, evaluates
+the analytic performance model (:func:`repro.perf.model.predict`),
+measures the compiled executor's steady-state throughput and XLA cost
+analysis (:mod:`repro.perf.measure`), drives a few frames through the
+serving engine under the obs tracer for the assemble/execute time
+split, and joins everything into a schema-stamped ``perf_report/v1``
+artifact (:mod:`repro.perf.attribution`) — rendered by
+``tools/obs_report.py --perf``.
+
+Every suite run (``perf`` plus the wrapped ``serve`` / ``video`` /
+``tune`` / ``chaos`` entry points) appends one schema-validated row to
+the ``BENCH_history.jsonl`` ledger, keyed by git SHA + seed + config
+fingerprint. The regression gate then compares the fresh ``perf``
+metrics against the committed ``BENCH_baseline.json``:
+
+  * deterministic model metrics (predicted cycles, model bytes, VMEM,
+    alloc bits, power) carry exact or near-exact bands — the compiler
+    must not drift silently;
+  * wall-clock throughput is normalized by an in-process machine
+    calibration (:func:`repro.perf.measure.calibrate`) and carries a
+    wide band — the gate hunts regressions, not runner speed deltas.
+
+``--inject-slowdown F`` is the gate's negative control: the harness
+measures every pipeline clean, re-measures with a deliberate per-frame
+stall of ``(F-1)x`` the clean frame time, and gates injected-vs-clean
+within the same process — deterministic, machine-independent, and CI
+asserts the nonzero exit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import common  # noqa: E402
+from benchmarks.common import geomean
+
+from repro.core import algorithms  # noqa: E402
+from repro.imaging import FrameEngine, FrameRequest, PlanCache  # noqa: E402
+from repro.imaging.tiling import rows_per_step_for_tile  # noqa: E402
+from repro.obs import export as obs_export  # noqa: E402
+from repro.obs import trace  # noqa: E402
+from repro.perf import attribution, ledger, measure  # noqa: E402
+from repro.perf import model as perf_model  # noqa: E402
+from repro.video import VideoEngine, VideoFrame  # noqa: E402
+
+DEFAULT_PIPELINES = (sorted(algorithms.ALGORITHMS)
+                     + sorted(algorithms.VIDEO_ALGORITHMS))
+SUITES = ("perf", "serve", "video", "tune", "chaos")
+
+# Gate bands for the perf suite (ratio current/baseline). The model
+# metrics are pure functions of the compiled plan — byte-stable across
+# machines — so any drift is a code change that must be acknowledged by
+# re-running --update-baseline. Calibrated throughput gets a wide band.
+PERF_BANDS = [
+    ledger.Band("predicted_cycles_total", 1.0, 1.0),
+    ledger.Band("model_bytes_total", 1.0, 1.0),
+    ledger.Band("vmem_bytes_total", 1.0, 1.0),
+    ledger.Band("alloc_bits_total", 1.0, 1.0),
+    ledger.Band("power_total", 0.999, 1.001),
+    ledger.Band("throughput_norm", 0.2, 5.0),
+]
+
+# Injected-vs-clean bands (same process, same config): a 2x stall moves
+# fps_geomean to ~0.5x of clean, far outside the band.
+INJECT_BANDS = [
+    ledger.Band("fps_geomean", 1 / 1.4, 1.4),
+]
+
+
+# ------------------------------------------------------------ perf suite
+def _measure_one(cache: PlanCache, name: str, h: int, w: int, frames: int,
+                 batch: int, seed: int, sleep_s: float = 0.0):
+    """(PerfModel, MeasuredPerf) for one (pipeline, shape) cell."""
+    rps = rows_per_step_for_tile(h)
+    temporal = cache.dag_for(name).is_temporal()
+    plan = cache.plan_for(name, w, rows_per_step=rps)
+    m = perf_model.predict(plan, h)
+    if temporal:
+        ex = cache.video_executor_for(name, h, w, rows_per_step=rps)
+    else:
+        ex = cache.executor_for(name, h, w, batch=batch, rows_per_step=rps)
+    meas = measure.measure_executor(ex, frames, np.random.RandomState(seed),
+                                    per_frame_sleep_s=sleep_s)
+    return m, meas
+
+
+def _drive_engines(cache: PlanCache, pipelines: list[str], h: int, w: int,
+                   seed: int, n_frames: int = 4) -> None:
+    """Push a few frames through the serving engines under the tracer so
+    every pipeline has engine.step / assemble / execute spans to split."""
+    rng = np.random.RandomState(seed)
+    image = [p for p in pipelines if p in algorithms.ALGORITHMS]
+    video = [p for p in pipelines if p in algorithms.VIDEO_ALGORITHMS]
+    if image:
+        eng = FrameEngine(cache=cache, max_batch=2)
+        reqs = [FrameRequest(i * len(image) + j, name,
+                             {"in": rng.rand(h, w).astype(np.float32)})
+                for i in range(n_frames) for j, name in enumerate(image)]
+        eng.run(reqs)
+    if video:
+        veng = VideoEngine(cache=cache, chunk=2)
+        for name in video:
+            sid = veng.open_stream(name, h, w)
+            fed, done = 0, 0
+            while done < n_frames:
+                while fed < n_frames and veng.submit(
+                        VideoFrame(sid, {"in": rng.rand(h, w)
+                                         .astype(np.float32)})):
+                    fed += 1
+                done += len(veng.step())
+            veng.close_stream(sid)
+
+
+def run_perf(args, peaks: measure.Peaks, sleep_factor: float = 0.0
+             ) -> tuple[dict | None, dict]:
+    """Full attribution pass; returns (perf_report or None, ledger metrics).
+
+    ``sleep_factor > 1`` re-measures each cell with a per-frame stall of
+    ``(factor - 1) x`` its clean frame time (the --inject-slowdown seam).
+    """
+    cache = PlanCache()
+    h = args.height
+    cells = []           # (model, measured, pipeline)
+    for name in args.pipelines:
+        for w in args.widths:
+            m, meas = _measure_one(cache, name, h, w, args.frames,
+                                   args.batch, args.seed)
+            if sleep_factor > 1.0:
+                stall = (sleep_factor - 1.0) * meas.wall_s / meas.frames
+                m, meas = _measure_one(cache, name, h, w, args.frames,
+                                       args.batch, args.seed, sleep_s=stall)
+            cells.append((m, meas))
+
+    _drive_engines(cache, args.pipelines, h, min(args.widths), args.seed)
+    trace_data = obs_export.to_chrome_trace(trace.events())
+    breakdowns = {p: measure.step_breakdown(trace_data, p)
+                  for p in args.pipelines}
+
+    clock = attribution.effective_clock_hz(cells)
+    entries = [attribution.attribute(m, meas, clock, peaks,
+                                     breakdown=breakdowns.get(m.pipeline))
+               for m, meas in cells]
+    config = {"pipelines": args.pipelines, "widths": args.widths,
+              "height": h, "frames": args.frames, "batch": args.batch,
+              "seed": args.seed, "smoke": args.smoke,
+              "inject_slowdown": sleep_factor}
+    report = attribution.build_report(entries, config, peaks, clock)
+
+    errs = attribution.validate_perf_report(report)
+    if errs:
+        print("INVALID perf report (refusing to write):\n  "
+              + "\n  ".join(errs))
+        return None, {}
+
+    s = report["summary"]
+    metrics = {
+        "predicted_cycles_total": sum(m.cycles_per_frame for m, _ in cells),
+        "model_bytes_total": sum(m.bytes_per_frame for m, _ in cells),
+        "vmem_bytes_total": sum(m.vmem_ring_bytes for m, _ in cells),
+        "alloc_bits_total": sum(m.alloc_bits for m, _ in cells),
+        "power_total": sum(m.power_total for m, _ in cells),
+        "port_slack_min": min(m.port_slack for m, _ in cells),
+        "fps_geomean": geomean(meas.fps for _, meas in cells),
+        "throughput_norm": (geomean(meas.fps for _, meas in cells)
+                            / (peaks.flops_per_s / 1e9)),
+        "efficiency_geomean": s["efficiency_geomean"],
+        "dma_bound": s["dma_bound"],
+        "compute_bound": s["compute_bound"],
+    }
+    if s["bytes_amplification_geomean"] is not None:
+        metrics["bytes_amplification_geomean"] = \
+            s["bytes_amplification_geomean"]
+    return report, metrics
+
+
+# ---------------------------------------------------- wrapped sub-suites
+def _suite_out(args, suite: str) -> str:
+    base = os.path.dirname(args.out) or "."
+    return os.path.join(base, f"BENCH_{suite}.lab.json")
+
+
+def _harvest_serve(rep: dict) -> dict:
+    rg = rep["rowgroup"]
+    r_top = rg["rows_swept"][-1]
+    per = rg["per_pipeline"]
+    return {
+        "pipelines_at_2x": rg["pipelines_at_2x"],
+        f"worst_speedup_r{r_top}":
+            min(s[f"worst_speedup_r{r_top}"] for s in per.values()),
+        f"geomean_speedup_r{r_top}":
+            geomean(s[f"geomean_speedup_r{r_top}"] for s in per.values()),
+    }
+
+
+def _harvest_video(rep: dict) -> dict:
+    per = rep["per_pipeline"]
+    return {
+        "fps_geomean": geomean(s["max_fps"] for s in per.values()),
+        "worst_scale_ulp": max(s["worst_scale_ulp"] for s in per.values()),
+        "chunk_speedup_geomean":
+            geomean(s["chunk_speedup"] for s in per.values()),
+    }
+
+
+def _harvest_tune(rep: dict) -> dict:
+    s = rep["summary"]
+    return {k: s[k] for k in ("geomean_power_ratio", "geomean_alloc_ratio",
+                              "worst_vmem_ratio", "worst_scale_ulp_vs_ref",
+                              "total_tune_s")}
+
+
+def _harvest_chaos(rep: dict) -> dict:
+    return {
+        "passed": float(rep["pass"]),
+        "faults_total": sum(rep["faults"].values()),
+        "frames_offered": sum(rep[p]["tally"]["offered"]
+                              for p in ("frame", "rate_limit", "video")),
+        "wall_s": rep["wall_s"],
+    }
+
+
+_SUITE_RUNNERS = {"serve": ("serve_frames", _harvest_serve),
+                  "video": ("serve_video", _harvest_video),
+                  "tune": ("tune_sweep", _harvest_tune),
+                  "chaos": ("chaos_soak", _harvest_chaos)}
+
+
+def run_wrapped_suite(args, suite: str) -> tuple[int, dict]:
+    """Run one wrapped benchmark entry point; returns (exit, metrics)."""
+    import importlib
+    mod_name, harvest = _SUITE_RUNNERS[suite]
+    mod = importlib.import_module(f"benchmarks.{mod_name}")
+    out = _suite_out(args, suite)
+    argv = ["--out", out] + (["--smoke"] if args.smoke else [])
+    rc = mod.main(argv)
+    try:
+        with open(out) as f:
+            rep = json.load(f)
+        return rc, harvest(rep)
+    except (OSError, KeyError, ValueError) as e:
+        print(f"suite {suite}: could not harvest {out}: {e}")
+        return rc or 1, {}
+
+
+# ------------------------------------------------------------------ main
+def main(argv=None) -> int:
+    ap = common.make_parser(
+        "Unified performance lab: attribution report + benchmark ledger "
+        "+ regression gate", out_default="BENCH_perf.json",
+        pipelines_default=DEFAULT_PIPELINES,
+        pipelines_choices=DEFAULT_PIPELINES,
+        widths_default=(48,), height_default=64, frames_default=24)
+    ap.add_argument("--suites", nargs="+", choices=SUITES,
+                    default=["perf"],
+                    help="benchmark suites to run and ledger")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="frame-batch per executor call (image pipelines)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ledger", default="BENCH_history.jsonl",
+                    help="append-only benchmark ledger (JSONL)")
+    ap.add_argument("--baseline", default="BENCH_baseline.json",
+                    help="committed regression baseline to gate against")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from this run instead of "
+                         "gating against it")
+    ap.add_argument("--inject-slowdown", type=float, default=0.0,
+                    metavar="F", help="negative control: stall each frame "
+                    "to F x its clean time and gate injected-vs-clean "
+                    "(a working gate exits nonzero)")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="append to the ledger but skip the regression "
+                         "gate")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.widths, args.height, args.frames = [48], 32, 8
+
+    trace.enable()       # the perf suite always wants engine spans
+    failures: list[str] = []
+    rows: dict[str, dict] = {}       # kind -> metrics (for baseline update)
+    kind_suffix = "_smoke" if args.smoke else ""
+    sha = ledger.git_sha()
+    rc = 0
+
+    for suite in args.suites:
+        if suite != "perf":
+            sub_rc, metrics = run_wrapped_suite(args, suite)
+            rc = rc or sub_rc
+            if metrics:
+                kind = suite + kind_suffix
+                rows[kind] = metrics
+                ledger.append_row(args.ledger, ledger.make_row(
+                    kind, args.seed,
+                    {"suite": suite, "smoke": args.smoke}, metrics,
+                    sha=sha))
+            continue
+
+        peaks = measure.calibrate()
+        print(f"calibrated peaks: {peaks.flops_per_s / 1e9:.1f} Gflop/s, "
+              f"{peaks.hbm_bytes_per_s / 1e9:.1f} GB/s")
+        report, metrics = run_perf(args, peaks)
+        if report is None:
+            return 1
+        print(attribution.perf_text(report))
+        common.write_report(args.out, report)
+        kind = "perf" + kind_suffix
+        rows[kind] = metrics
+        ledger.append_row(args.ledger, ledger.make_row(
+            kind, args.seed, report["config"], metrics, sha=sha))
+        print(f"ledger: appended {kind} row to {args.ledger}")
+
+        if args.inject_slowdown > 1.0:
+            _, injected = run_perf(args, peaks,
+                                   sleep_factor=args.inject_slowdown)
+            bad = ledger.gate(metrics, injected, INJECT_BANDS)
+            print(f"inject-slowdown {args.inject_slowdown}x: "
+                  f"clean {metrics['fps_geomean']:.1f} f/s -> injected "
+                  f"{injected.get('fps_geomean', 0):.1f} f/s")
+            failures += [f"[injected] {b}" for b in bad]
+
+    # ------------------------------------------------------------- gate
+    if args.update_baseline:
+        kinds = {}
+        if os.path.exists(args.baseline):   # keep kinds not re-run today
+            old = ledger.load_baseline(args.baseline)
+            kinds.update({k: {"metrics": v.get("metrics", {}),
+                              "bands": v.get("bands", [])}
+                          for k, v in old["kinds"].items()})
+        for kind, metrics in rows.items():
+            bands = PERF_BANDS if kind.startswith("perf") else []
+            kinds[kind] = {"metrics": metrics, "bands": bands}
+        ledger.write_baseline(args.baseline, kinds,
+                              note="written by benchmarks/perf_lab.py "
+                                   "--update-baseline")
+        print(f"baseline: wrote {args.baseline} "
+              f"({', '.join(sorted(kinds))})")
+    elif not args.no_gate and os.path.exists(args.baseline):
+        base = ledger.load_baseline(args.baseline)
+        for kind, metrics in rows.items():
+            bands = ledger.baseline_bands(base, kind)
+            if not bands:
+                continue
+            failures += [f"[{kind}] {b}"
+                         for b in ledger.gate(
+                             ledger.baseline_metrics(base, kind),
+                             metrics, bands)]
+        print(f"gate: checked {sum(1 for k in rows if ledger.baseline_bands(base, k))} "
+              f"kind(s) against {args.baseline}")
+    elif not args.no_gate:
+        print(f"gate: no baseline at {args.baseline} (run "
+              f"--update-baseline to create one)")
+
+    if failures:
+        print("REGRESSION GATE FAILED:\n  " + "\n  ".join(failures))
+        return 1
+    if rc:
+        print(f"suite failure (exit {rc})")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

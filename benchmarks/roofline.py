@@ -1,46 +1,45 @@
-"""Roofline summarizer: dryrun JSON -> EXPERIMENTS.md tables.
+"""Roofline summarizer: dryrun JSON -> markdown table.
 
     PYTHONPATH=src:. python -m benchmarks.roofline results/dryrun.json
 
-Backend caveat (measured, see EXPERIMENTS.md §Dry-run): XLA:CPU
-cost_analysis counts while/scan loop *bodies once*, not x trip count, and
-lists loop-body collectives once in the HLO text. We therefore apply a
-structural correction
+Turns the launch dry-run's per-cell XLA cost/memory analysis
+(``repro.launch.dryrun``) into a markdown roofline table: compute /
+memory / collective time terms at TPU-v5e-class peaks, the dominant
+term, and per-device HLO flops and HBM footprint.
 
-    scale = grad_accum x n_layers / sum(superblock sizes)
-
-to the HLO bytes and collective bytes (the repeated part dominates), and
-use ANALYTIC flops for the compute term: 6*N_active*tokens (train,
-2x for inference) + the attention score/value terms with the effective
-context (window for banded layers, full seq otherwise). Inner loops
-(flash kv-blocks, recurrent chunk scans) remain once-counted in the HLO
-numbers — another reason the compute term is analytic.
+The peak constants and the XLA ``cost_analysis`` caveats (loop bodies
+counted once, interpret-mode HLO, pre-0.5 list-form results) live in
+:mod:`repro.perf.measure` next to the measurement code they qualify;
+the roofline time terms themselves are :func:`repro.launch.dryrun.
+roofline_terms`. This module is only the table renderer plus the
+``model_flops`` analytic estimator kept for the dry-run sanity tests.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 import numpy as np
 
-PEAK = 197e12
-HBM = 819e9
-ICI = 50e9 * 4
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.perf.measure import (TPU_V5E_HBM_BPS,  # noqa: E402,F401
+                                TPU_V5E_ICI_BPS, TPU_V5E_PEAK_FLOPS)
+
+# Backwards-compat aliases (the old module-level names)
+PEAK = TPU_V5E_PEAK_FLOPS
+HBM = TPU_V5E_HBM_BPS
+ICI = TPU_V5E_ICI_BPS
 
 
-def _cfg_model(arch):
+def counts(arch: str):
+    """(cfg, n_active_matmul_params, scan-superblock denominator)."""
     import jax
 
     from repro.models import build_model, get_config
     cfg = get_config(arch)
     model = build_model(cfg)
-    return cfg, model
-
-
-def counts(arch: str):
-    """(n_active_matmul_params, scan correction denominator)."""
-    import jax
-    cfg, model = _cfg_model(arch)
     shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
     total = expert = 0
     # jax.tree.flatten_with_path only exists in newer jax; the tree_util
@@ -59,71 +58,8 @@ def counts(arch: str):
     return cfg, n_active, sum_k
 
 
-def analytic_flops(arch: str, shape: str) -> float:
-    from repro.launch.shapes import SHAPES
-    cfg, n_active, _ = counts(arch)
-    sh = SHAPES[shape]
-    kind = sh["kind"]
-    seq, batch = sh["seq"], sh["batch"]
-    if kind == "decode":
-        tokens = batch
-        fwd_factor = 1.0
-    else:
-        tokens = batch * seq
-        fwd_factor = 3.0 if kind == "train" else 1.0
-    f = 2.0 * n_active * tokens * fwd_factor
-    # attention score+value terms per layer: 4 * tokens * ctx * n*hd
-    d_attn = cfg.n_heads * cfg.hd
-    ctx_local = min(2 * cfg.window, seq) if cfg.window else seq
-    for lk in (cfg.layer_kinds() if cfg.family not in ("ssm",) else []):
-        if cfg.family == "hybrid" and lk != "L":
-            continue
-        ctx = ctx_local if lk == "L" else seq
-        if kind == "decode":
-            ctx = min(cfg.window, seq) if lk == "L" else seq
-        f += 4.0 * tokens * ctx * d_attn * fwd_factor
-    if cfg.family == "ssm":  # WKV state update+readout ~ 4*d*hd per token
-        hd = cfg.d_model // cfg.n_heads
-        f += 4.0 * tokens * cfg.d_model * hd * cfg.n_layers * fwd_factor
-    return f
-
-
-def summarize(path: str) -> str:
-    from repro.launch.dryrun import GRAD_ACCUM
-    with open(path) as f:
-        cells = json.load(f)
-    lines = [
-        "| arch | shape | mesh | compute_s | memory_s | coll_s | dominant |"
-        " roofline frac | HLO TF/dev (raw) | HBM GiB/dev | status |",
-        "|---|---|---|---|---|---|---|---|---|---|---|"]
-    for c in cells:
-        if c["status"] != "run":
-            lines.append(
-                f"| {c['arch']} | {c['shape']} | {c['mesh']} | - | - | - |"
-                f" - | - | - | - | {c['status'][:60]} |")
-            continue
-        cfg, n_active, sum_k = counts(c["arch"])
-        ga = GRAD_ACCUM.get(c["arch"], 1) if c["shape"] == "train_4k" else 1
-        scale = ga * cfg.n_layers / sum_k
-        chips = 512 if c["mesh"] == "multipod" else 256
-        af = analytic_flops(c["arch"], c["shape"])
-        t_comp = af / chips / PEAK
-        t_mem = c["bytes_per_dev"] * scale / HBM
-        t_coll = sum(c["coll_bytes"].values()) * scale / ICI
-        dom = max([("compute", t_comp), ("memory", t_mem),
-                   ("collective", t_coll)], key=lambda kv: kv[1])[0]
-        frac = t_comp / max(t_comp, t_mem, t_coll)
-        hbm = (c["arg_bytes"] + c["temp_bytes"] + c["out_bytes"]) / (1 << 30)
-        lines.append(
-            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
-            f"| {t_comp:.4f} | {t_mem:.4f} | {t_coll:.4f} | {dom} "
-            f"| {frac:.2f} | {c['flops_per_dev']/1e12:.2f} "
-            f"| {hbm:.1f} | ok |")
-    return "\n".join(lines)
-
-
-# kept for tests / backwards-compat
 def model_flops(arch: str, shape: str) -> float:
+    """Analytic flops for one dry-run cell (2ND/token rule of thumb)."""
     from repro.launch.shapes import SHAPES
     cfg, n_active, _ = counts(arch)
     sh = SHAPES[shape]
@@ -132,6 +68,32 @@ def model_flops(arch: str, shape: str) -> float:
     if sh["kind"] == "prefill":
         return 2.0 * n_active * sh["batch"] * sh["seq"]
     return 2.0 * n_active * sh["batch"]
+
+
+def summarize(path: str) -> str:
+    """Markdown roofline table from a dryrun.json cell list."""
+    from repro.launch.dryrun import roofline_terms
+    with open(path) as f:
+        cells = json.load(f)
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | coll_s | dominant |"
+        " HLO TF/dev | HBM GiB/dev | status |",
+        "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c["status"] != "run":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | - | - | - |"
+                f" - | - | - | {c['status'][:60]} |")
+            continue
+        r = roofline_terms(c["flops_per_dev"], c["bytes_per_dev"],
+                           c["coll_bytes"])
+        hbm = (c["arg_bytes"] + c["temp_bytes"] + c["out_bytes"]) / (1 << 30)
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {c['flops_per_dev'] / 1e12:.2f} | {hbm:.1f} | ok |")
+    return "\n".join(lines)
 
 
 if __name__ == "__main__":

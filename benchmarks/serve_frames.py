@@ -33,33 +33,24 @@ so the BENCH artifact ships with an attributable timeline.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import sys
 import time
 
 import numpy as np
 
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from benchmarks import common  # noqa: E402
+from benchmarks.common import geomean, max_ulp, steady_fps  # noqa: E402
 from repro.core import DP, algorithms, compile_pipeline  # noqa: E402
 from repro.imaging import FrameEngine, FrameRequest, PlanCache  # noqa: E402
 from repro.kernels.stencil_pipeline import make_executor  # noqa: E402
-from repro.obs import export as obs_export  # noqa: E402
-from repro.obs import trace  # noqa: E402
 
 DEFAULT_PIPELINES = ["canny-s", "canny-m", "harris-s", "harris-m",
                      "unsharp-m", "xcorr-m", "denoise-m"]
 SCHEMA = "bench_serve/v2"
-
-
-def _max_ulp(a: np.ndarray, b: np.ndarray) -> float:
-    """Approximate max ULP distance (0.0 when bitwise equal)."""
-    if (a == b).all():
-        return 0.0
-    scale = np.spacing(np.maximum(np.abs(a), np.abs(b)).astype(np.float32))
-    return float(np.max(np.abs(a - b) / scale))
 
 
 def bench_rowgroup_cell(cache: PlanCache, name: str, h: int, w: int,
@@ -77,12 +68,7 @@ def bench_rowgroup_cell(cache: PlanCache, name: str, h: int, w: int,
         compile_ms = (time.perf_counter() - t0) * 1e3
         if ref_out is None:
             ref_out = out
-        for fr in stream[:3]:                       # settle caches/allocator
-            ex(fr).block_until_ready()
-        t0 = time.perf_counter()
-        for fr in stream:
-            ex(fr).block_until_ready()
-        fps = batch * frames / (time.perf_counter() - t0)
+        fps, _ = steady_fps(ex, stream, settle=3, frames_per_item=batch)
         if r1_fps is None:
             r1_fps = fps
         cells.append({
@@ -92,7 +78,7 @@ def bench_rowgroup_cell(cache: PlanCache, name: str, h: int, w: int,
             "vmem_bytes": ex.vmem_bytes,
             "compile_ms": compile_ms,
             "bitwise_equal_r1": bool((out == ref_out).all()),
-            "max_ulp_vs_r1": _max_ulp(out, ref_out),
+            "max_ulp_vs_r1": max_ulp(out, ref_out),
         })
     return cells
 
@@ -124,7 +110,7 @@ def run_rowgroup(args, rng) -> dict:
         bw = [c["bitwise_equal_r1"] for c in cells
               if c["pipeline"] == name and c["rows_per_step"] == r_top]
         summary[name] = {
-            f"geomean_speedup_r{r_top}": float(np.exp(np.mean(np.log(sp)))),
+            f"geomean_speedup_r{r_top}": geomean(sp),
             f"worst_speedup_r{r_top}": min(sp),
             "all_bitwise_equal_r1": all(bw),
         }
@@ -175,11 +161,9 @@ def bench_cached_cell(name: str, h: int, w: int, batch: int, frames: int,
 
     cache = PlanCache()
     ex = cache.executor_for(name, h, w, batch=batch)
-    ex(mk()).block_until_ready()            # warm: trace + jit happens here
-    t0 = time.perf_counter()
-    for _ in range(frames):
-        ex(mk()).block_until_ready()
-    cached_fps = batch * frames / (time.perf_counter() - t0)
+    stream = [mk() for _ in range(frames)]
+    cached_fps, _ = steady_fps(ex, stream, settle=1,  # warm: trace + jit
+                               frames_per_item=batch)
 
     return {"pipeline": name, "h": h, "w": w, "batch": batch,
             "baseline_fps": baseline_fps, "cached_fps": cached_fps,
@@ -202,35 +186,25 @@ def run_cached(args, rng) -> dict:
                       f"{r['batch']:>3} {r['baseline_fps']:>13.2f} "
                       f"{r['cached_fps']:>11.2f} {r['speedup']:>7.1f}x")
     worst = min(r["speedup"] for r in rows)
-    gmean = float(np.exp(np.mean([np.log(r["speedup"]) for r in rows])))
+    gmean = geomean(r["speedup"] for r in rows)
     print(f"cached-vs-recompile: worst {worst:.1f}x, geomean {gmean:.1f}x "
           f"over {len(rows)} cells")
     return {"cells": rows, "worst_speedup": worst, "geomean_speedup": gmean}
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--pipelines", nargs="+", default=DEFAULT_PIPELINES,
-                    choices=sorted(algorithms.ALGORITHMS))
-    ap.add_argument("--widths", nargs="+", type=int, default=[48, 96])
+    ap = common.make_parser("Frame-serving throughput benchmark",
+                            out_default="BENCH_serve.json",
+                            pipelines_default=DEFAULT_PIPELINES,
+                            pipelines_choices=sorted(algorithms.ALGORITHMS),
+                            frames_default=40)
     ap.add_argument("--batches", nargs="+", type=int, default=[1, 4])
-    ap.add_argument("--height", type=int, default=64)
     ap.add_argument("--rows", nargs="+", type=int, default=[1, 4, 8],
                     help="rows_per_step values to sweep (1 always added)")
-    ap.add_argument("--frames", type=int, default=40,
-                    help="steady-state frame-batches per cell")
     ap.add_argument("--with-baseline", action="store_true",
                     help="also run the recompile-every-frame comparison")
     ap.add_argument("--baseline-frames", type=int, default=2,
                     help="compile-every-frame iterations per cell")
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI gate: tiny sweep, fail if R=8 is slower "
-                         "than R=1")
-    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
-                    help="capture a Chrome/Perfetto span trace of the "
-                         "run (plus a traced engine+autotune drain) and "
-                         "write it here")
-    ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -239,8 +213,7 @@ def main(argv=None) -> int:
         args.rows, args.frames = [1, 8], 4
         args.with_baseline = False
 
-    if args.trace:
-        trace.enable()
+    common.init_trace(args)
 
     rng = np.random.RandomState(0)
     report = {"schema": SCHEMA,
@@ -253,18 +226,8 @@ def main(argv=None) -> int:
     if args.trace:
         report["traced_engine"] = run_traced_engine(args, rng)
 
-    if args.out:
-        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-        with open(args.out, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"wrote {args.out}")
-
-    if args.trace:
-        data = obs_export.export_global_trace(args.trace,
-                                              process_name="serve_frames")
-        print(f"wrote {args.trace} "
-              f"({sum(e.get('ph') == 'X' for e in data['traceEvents'])} "
-              f"spans)\n" + obs_export.flame_summary(data, top=12))
+    common.write_report(args.out, report)
+    common.finish_trace(args, process_name="serve_frames")
 
     if args.smoke:
         r_top = max(args.rows)

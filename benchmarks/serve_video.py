@@ -26,21 +26,20 @@ warns (wall-clock on shared CI runners is too noisy to gate hard).
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import sys
 import time
 
 import numpy as np
 
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from benchmarks import common  # noqa: E402
+from benchmarks.common import scale_ulp  # noqa: E402
 from repro.core import algorithms  # noqa: E402
 from repro.imaging import PlanCache  # noqa: E402
 from repro.kernels import ref  # noqa: E402
-from repro.obs import export as obs_export  # noqa: E402
-from repro.obs import trace  # noqa: E402
 from repro.video import VideoEngine, VideoFrame  # noqa: E402
 
 DEFAULT_PIPELINES = sorted(algorithms.VIDEO_ALGORITHMS)
@@ -79,15 +78,14 @@ def bench_cell(cache: PlanCache, name: str, h: int, w: int, chunk: int,
 
     eng = VideoEngine(cache=cache, chunk=chunk)
     got, _, _ = stream_through_engine(eng, name, vid)       # warm compile
-    err = np.abs(got - exp).max()
-    scale_ulp = (0.0 if (got == exp).all()
-                 else float(err / np.spacing(np.abs(exp).max())))
+    drift_ulp = scale_ulp(got, exp)
     got2, step_s, stats = stream_through_engine(eng, name, vid)  # timed
     assert (got2 == got).all(), "stream replay must be deterministic"
 
-    plan = cache.plan_for(name, w, rows_per_step=eng.rows_per_step
-                          if h >= eng.rows_per_step else 1)
-    ex = eng._executor(name, h, w, n=chunk)
+    rps = eng.rows_per_step if h >= eng.rows_per_step else 1
+    plan = cache.plan_for(name, w, rows_per_step=rps)
+    ex = eng.cache.video_executor_for(name, h, w, chunk=chunk,
+                                      rows_per_step=rps)
     return {
         "pipeline": name, "h": h, "w": w, "chunk": chunk, "frames": frames,
         "fps": frames / step_s,
@@ -96,26 +94,18 @@ def bench_cell(cache: PlanCache, name: str, h: int, w: int, chunk: int,
         "warmup_latency_s": stats["warmup_latency_s"],
         "frame_ring_bytes": plan.vmem_frame_bytes(h),
         "vmem_ring_bytes": ex.vmem_bytes,
-        "bitwise_equal_ref": scale_ulp == 0.0,
-        "scale_ulp_vs_ref": scale_ulp,
+        "bitwise_equal_ref": drift_ulp == 0.0,
+        "scale_ulp_vs_ref": drift_ulp,
     }
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--pipelines", nargs="+", default=DEFAULT_PIPELINES,
-                    choices=DEFAULT_PIPELINES)
-    ap.add_argument("--widths", nargs="+", type=int, default=[48, 96])
-    ap.add_argument("--height", type=int, default=64)
+    ap = common.make_parser("Video-serving throughput benchmark",
+                            out_default="BENCH_video.json",
+                            pipelines_default=DEFAULT_PIPELINES,
+                            pipelines_choices=DEFAULT_PIPELINES,
+                            frames_default=48)
     ap.add_argument("--chunks", nargs="+", type=int, default=[1, 4])
-    ap.add_argument("--frames", type=int, default=48,
-                    help="stream length per cell")
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI gate: tiny sweep, fail on correctness drift")
-    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
-                    help="capture a Chrome/Perfetto span trace of the run "
-                         "and write it here")
-    ap.add_argument("--out", default="BENCH_video.json")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -123,8 +113,7 @@ def main(argv=None) -> int:
         args.widths, args.height = [48], 32
         args.chunks, args.frames = [1, 4], 24
 
-    if args.trace:
-        trace.enable()
+    common.init_trace(args)
 
     rng = np.random.RandomState(0)
     cache = PlanCache()
@@ -161,17 +150,8 @@ def main(argv=None) -> int:
                          "frames": args.frames, "smoke": args.smoke},
               "cells": cells, "per_pipeline": summary}
 
-    if args.out:
-        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-        with open(args.out, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"wrote {args.out}")
-
-    if args.trace:
-        data = obs_export.export_global_trace(args.trace,
-                                              process_name="serve_video")
-        print(f"wrote {args.trace}\n" + obs_export.flame_summary(data,
-                                                                 top=12))
+    common.write_report(args.out, report)
+    common.finish_trace(args, process_name="serve_video")
 
     worst = max(c["scale_ulp_vs_ref"] for c in cells)
     print(f"correctness: worst drift {worst:.0f} ULP at array scale "

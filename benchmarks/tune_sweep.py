@@ -28,38 +28,28 @@ correctness bound is exceeded. Throughput is reported, never gated
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import sys
-import time
 import zlib
 
 import numpy as np
 
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from benchmarks import common  # noqa: E402
+from benchmarks.common import (geomean, scale_ulp, steady_fps,  # noqa: E402
+                               timed_scan)
 from repro.core import algorithms  # noqa: E402
 from repro.imaging import PlanCache  # noqa: E402
 from repro.imaging.tiling import rows_per_step_for_tile  # noqa: E402
 from repro.kernels import ref  # noqa: E402
-from repro.obs import export as obs_export  # noqa: E402
-from repro.obs import trace  # noqa: E402
 
 DEFAULT_PIPELINES = (sorted(algorithms.ALGORITHMS)
                      + sorted(algorithms.VIDEO_ALGORITHMS))
 SCHEMA = "bench_tune/v1"
 TUNE_DRIFT_ULP = 3    # tuned vs default executor, at array scale
 WOBBLE_ULP = 32       # executor vs pure-jnp oracle (FMA contraction)
-
-
-def _scale_ulp(got: np.ndarray, exp: np.ndarray) -> float:
-    """Max |got-exp| as a multiple of the float32 spacing at the
-    reference's scale; 0.0 when bitwise equal."""
-    if (got == exp).all():
-        return 0.0
-    err = np.abs(got - exp).max()
-    return float(err / np.spacing(np.abs(exp).max()))
 
 
 def _plan_metrics(plan) -> dict:
@@ -72,31 +62,21 @@ def _plan_metrics(plan) -> dict:
 def _run_spatial(cache: PlanCache, name: str, h: int, w: int, frames: int,
                  rps: int, rng, tune: bool):
     ex = cache.executor_for(name, h, w, rows_per_step=rps, tune=tune)
-    stream = [rng.rand(h, w).astype(np.float32) for _ in range(frames)]
-    out = ex({"in": stream[0]})
-    out.block_until_ready()                  # compile outside the clock
-    t0 = time.perf_counter()
-    for fr in stream:
-        out = ex({"in": fr})
-        out.block_until_ready()
-    return np.asarray(out), frames / (time.perf_counter() - t0), stream[-1]
+    stream = [{"in": rng.rand(h, w).astype(np.float32)}
+              for _ in range(frames)]
+    fps, out = steady_fps(ex, stream, settle=1)  # compile outside the clock
+    return np.asarray(out), fps, stream[-1]["in"]
 
 
 def _run_video(cache: PlanCache, name: str, h: int, w: int, frames: int,
                rps: int, rng, tune: bool):
     ex = cache.video_executor_for(name, h, w, rows_per_step=rps, tune=tune)
     vid = rng.rand(frames, h, w).astype(np.float32)
-    state = ex.init_state()
-    out, state2 = ex({"in": vid[0]}, state)  # compile outside the clock
+    out, _ = ex({"in": vid[0]}, ex.init_state())  # compile outside the clock
     out.block_until_ready()
-    t0 = time.perf_counter()
-    outs = []
-    for t in range(frames):
-        out, state = ex({"in": vid[t]}, state)
-        outs.append(out)
-    outs[-1].block_until_ready()
-    return (np.stack([np.asarray(o) for o in outs]),
-            frames / (time.perf_counter() - t0), vid)
+    outs, _, secs = timed_scan(lambda fr, st: ex({"in": fr}, st),
+                               list(vid), ex.init_state())
+    return (np.stack([np.asarray(o) for o in outs]), frames / secs, vid)
 
 
 def bench_cell(cache: PlanCache, name: str, h: int, w: int,
@@ -135,34 +115,24 @@ def bench_cell(cache: PlanCache, name: str, h: int, w: int,
         "n_candidates": len(tuning.candidates),
         "tune_s": tuning.stats.tune_s,
         "space_size": tuning.stats.space_size,
-        "tuned_vs_default_ulp": _scale_ulp(out_t, out_d),
-        "scale_ulp_vs_ref": _scale_ulp(out_t, exp),
+        "tuned_vs_default_ulp": scale_ulp(out_t, out_d),
+        "scale_ulp_vs_ref": scale_ulp(out_t, exp),
     }
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--pipelines", nargs="+", default=DEFAULT_PIPELINES,
-                    choices=DEFAULT_PIPELINES)
-    ap.add_argument("--widths", nargs="+", type=int, default=[48, 96])
-    ap.add_argument("--height", type=int, default=64)
-    ap.add_argument("--frames", type=int, default=24)
+    ap = common.make_parser("Memory-config autotuning sweep",
+                            out_default="BENCH_tune.json",
+                            pipelines_default=DEFAULT_PIPELINES,
+                            pipelines_choices=DEFAULT_PIPELINES)
     ap.add_argument("--max-candidates", type=int, default=128)
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI gate: tiny sweep, fail on vmem regression "
-                         "or correctness drift")
-    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
-                    help="capture a Chrome/Perfetto span trace of the run "
-                         "and write it here")
-    ap.add_argument("--out", default="BENCH_tune.json")
     args = ap.parse_args(argv)
 
     if args.smoke:
         args.pipelines = ["unsharp-m", "canny-m", "tmotion-t"]
         args.widths, args.height, args.frames = [48], 32, 8
 
-    if args.trace:
-        trace.enable()
+    common.init_trace(args)
 
     cache = PlanCache(tune_max_candidates=args.max_candidates)
     cells = []
@@ -180,10 +150,8 @@ def main(argv=None) -> int:
                   f"{c['scale_ulp_vs_ref']:>6.0f}ulp")
 
     summary = {
-        "geomean_power_ratio": float(np.exp(np.mean(
-            np.log([c["power_ratio"] for c in cells])))),
-        "geomean_alloc_ratio": float(np.exp(np.mean(
-            np.log([c["alloc_ratio"] for c in cells])))),
+        "geomean_power_ratio": geomean(c["power_ratio"] for c in cells),
+        "geomean_alloc_ratio": geomean(c["alloc_ratio"] for c in cells),
         "worst_vmem_ratio": max(c["vmem_ratio"] for c in cells),
         "worst_tuned_vs_default_ulp": max(c["tuned_vs_default_ulp"]
                                           for c in cells),
@@ -196,17 +164,8 @@ def main(argv=None) -> int:
                          "max_candidates": args.max_candidates,
                          "smoke": args.smoke},
               "cells": cells, "summary": summary}
-    if args.out:
-        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-        with open(args.out, "w") as f:
-            json.dump(report, f, indent=1)
-        print(f"wrote {args.out}")
-
-    if args.trace:
-        data = obs_export.export_global_trace(args.trace,
-                                              process_name="tune_sweep")
-        print(f"wrote {args.trace}\n" + obs_export.flame_summary(data,
-                                                                 top=12))
+    common.write_report(args.out, report)
+    common.finish_trace(args, process_name="tune_sweep")
 
     print(f"summary: power x{summary['geomean_power_ratio']:.3f} "
           f"alloc x{summary['geomean_alloc_ratio']:.3f} "

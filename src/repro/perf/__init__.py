@@ -1,0 +1,44 @@
+"""Performance attribution: model-vs-measured efficiency accounting.
+
+The paper's central claim is that an ImaGen accelerator's throughput and
+memory behavior are *analytic* — port-conflict constraints, line-buffer
+occupancy, and the SRAM power model predict cycles and traffic before
+anything runs. This package closes the loop between those predictions
+and the running system:
+
+  * :mod:`model` — predicted steady-state cycles/frame and bytes moved,
+    derived from the ILP :class:`~repro.core.ilp.Schedule` and the
+    compiled :class:`~repro.core.codegen.PipelinePlan`
+    (``predict(plan, h) -> PerfModel``).
+  * :mod:`measure` — the measured side: steady-state executor timing,
+    XLA ``cost_analysis`` flops/bytes, engine-step self-time breakdowns
+    from obs traces, and the roofline-style DMA-bound vs compute-bound
+    classification.
+  * :mod:`attribution` — joins the two into per-pipeline efficiency
+    ratios (achieved/predicted throughput, bytes amplification) with
+    time fractions that provably sum to 1, rendered as the
+    ``perf_report/v1`` artifact.
+  * :mod:`ledger` — the continuous benchmark ledger
+    (``BENCH_history.jsonl``; schema-validated rows keyed by git SHA +
+    seed + config fingerprint) and the CI regression gate that compares
+    a run against a committed baseline within explicit tolerance bands.
+
+Entry point: ``python -m benchmarks.perf_lab`` (see benchmarks/).
+"""
+from .attribution import (PERF_SCHEMA, attribute, build_report, perf_text,
+                          validate_perf_report)
+from .ledger import (LEDGER_SCHEMA, Band, append_row, config_fingerprint,
+                     gate, git_sha, make_row, read_ledger, validate_row)
+from .measure import (MeasuredPerf, Peaks, classify, executor_cost,
+                      measure_executor, step_breakdown)
+from .model import PerfModel, exact_fractions, predict
+
+__all__ = [
+    "PerfModel", "predict", "exact_fractions",
+    "MeasuredPerf", "Peaks", "classify", "executor_cost",
+    "measure_executor", "step_breakdown",
+    "PERF_SCHEMA", "attribute", "build_report", "perf_text",
+    "validate_perf_report",
+    "LEDGER_SCHEMA", "Band", "append_row", "config_fingerprint", "gate",
+    "git_sha", "make_row", "read_ledger", "validate_row",
+]

@@ -1,0 +1,250 @@
+"""Performance-attribution lab: model, fractions, ledger, gate, schema.
+
+Covers the src/repro/perf subsystem end to end without touching jax
+execution: the analytic model's monotonicity properties, the
+exactly-partitioning fractions the report promises, the benchmark
+ledger's append/read round-trip and its rejection of schema-corrupt
+rows, and the regression gate firing on a synthetically slowed run
+while staying quiet inside the tolerance band.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import DP, algorithms, compile_pipeline
+from repro.core.algorithms import conv_fn, gauss1d
+from repro.core.dsl import Pipeline
+from repro.perf import attribution, ledger
+from repro.perf import model as perf_model
+from repro.perf.measure import MeasuredPerf, Peaks, classify
+
+PEAKS = Peaks(flops_per_s=1e11, hbm_bytes_per_s=1e10)
+
+
+def _conv_chain(name: str, k: int):
+    """input -> one k x k convolution -> output."""
+    p = Pipeline(name)
+    x = p.input("in")
+    w = np.outer(gauss1d(k), gauss1d(k)).astype(np.float32)
+    c = p.stage("c", [(x, k, k)], conv_fn(w))
+    p.output("out", [(c, 1, 1)])
+    return p.build()
+
+
+def _predict(dag, w: int, h: int) -> perf_model.PerfModel:
+    return perf_model.predict(compile_pipeline(dag, w, mem=DP), h)
+
+
+# ----------------------------------------------------------- model side
+def test_predicted_cycles_monotone_in_shape():
+    dag = algorithms.ALGORITHMS["unsharp-m"]()
+    base = _predict(dag, 32, 16)
+    wider = _predict(dag, 64, 16)
+    taller = _predict(dag, 32, 48)
+    # steady state is 1 px/cycle: cycles grow with both frame dimensions
+    assert wider.cycles_per_frame > base.cycles_per_frame
+    assert taller.cycles_per_frame > base.cycles_per_frame
+    # widening also deepens the line buffers -> longer pipeline fill
+    assert wider.fill_cycles > base.fill_cycles
+    # height only scales the steady-state term, never the fill latency
+    assert taller.fill_cycles == base.fill_cycles
+    assert (taller.steady_cycles_per_frame
+            == 3 * base.steady_cycles_per_frame)
+
+
+def test_predicted_cycles_monotone_in_stencil_extent():
+    small = _predict(_conv_chain("k3", 3), 32, 16)
+    large = _predict(_conv_chain("k5", 5), 32, 16)
+    # a taller stencil needs more buffered lines before the first output
+    assert large.fill_cycles > small.fill_cycles
+    assert large.cycles_per_frame > small.cycles_per_frame
+    # and the wider window raises the per-cycle SRAM traffic
+    assert large.sram_bytes_per_frame > small.sram_bytes_per_frame
+
+
+def test_model_fractions_partition_exactly():
+    m = _predict(algorithms.ALGORITHMS["harris-s"](), 32, 16)
+    for fr in (m.traffic_fractions, m.sram_fractions, m.power_fractions):
+        assert fr, "expected non-empty fractions"
+        assert math.fsum(fr.values()) == 1.0
+        assert all(0.0 <= v <= 1.0 for v in fr.values())
+    assert m.hbm_bytes_per_frame > 0
+    assert m.sram_bytes_per_frame > 0
+    assert m.bytes_per_frame == (m.hbm_bytes_per_frame
+                                 + m.sram_bytes_per_frame)
+
+
+def test_exact_fractions():
+    fr = perf_model.exact_fractions({"a": 1.0, "b": 2.0, "c": 0.1})
+    assert math.fsum(fr.values()) == 1.0
+    assert fr["b"] > fr["a"] > fr["c"]
+    # pathological ratios still partition exactly
+    fr = perf_model.exact_fractions({c: (i + 1) * 1e-7 for i, c in
+                                     enumerate("abcdefghijk")})
+    assert math.fsum(fr.values()) == 1.0
+    assert perf_model.exact_fractions({}) == {}
+    assert perf_model.exact_fractions({"a": 0.0}) == {}
+    with pytest.raises(ValueError):
+        perf_model.exact_fractions({"a": 1.0, "b": -0.5})
+
+
+# -------------------------------------------------------------- roofline
+def test_classify_bounds():
+    # intensity far below the ridge (10 flops/byte) -> DMA-bound
+    lo = classify(flops=1e3, bytes_moved=1e6, peaks=PEAKS)
+    assert lo["bound"] == "dma"
+    assert lo["t_memory_s"] > lo["t_compute_s"]
+    # far above -> compute-bound
+    hi = classify(flops=1e9, bytes_moved=1e3, peaks=PEAKS)
+    assert hi["bound"] == "compute"
+    # exactly at the ridge: transfers are what overlap would hide
+    ridge = classify(flops=PEAKS.ridge_intensity * 1e6, bytes_moved=1e6,
+                     peaks=PEAKS)
+    assert ridge["bound"] == "dma"
+
+
+# ----------------------------------------------------- attribution report
+def _report_for(m: perf_model.PerfModel) -> dict:
+    meas = MeasuredPerf(pipeline=m.pipeline, h=m.h, w=m.w, frames=8,
+                        wall_s=0.5, fps=16.0,
+                        flops_per_frame=1e4, bytes_per_frame=2e5)
+    clock = attribution.effective_clock_hz([(m, meas)])
+    breakdown = {"n_steps": 4, "step_s": 0.40, "queue_wait_s": 0.01,
+                 "assemble_s": 0.05, "execute_s": 0.30,
+                 "step_self_s": 0.02}
+    entry = attribution.attribute(m, meas, clock, PEAKS,
+                                  breakdown=breakdown)
+    return attribution.build_report([entry], {"test": True}, PEAKS, clock)
+
+
+def test_attribution_report_valid_and_partitioned():
+    rep = _report_for(_predict(algorithms.ALGORITHMS["unsharp-m"](),
+                               32, 16))
+    assert attribution.validate_perf_report(rep) == []
+    (entry,) = rep["pipelines"]
+    # the calibrating pipeline has efficiency exactly 1
+    assert entry["efficiency"] == pytest.approx(1.0)
+    assert entry["roofline"]["bound"] in ("dma", "compute")
+    assert math.fsum(entry["time_fractions"].values()) == 1.0
+    assert entry["bytes_amplification"] == pytest.approx(
+        2e5 / entry["model"]["bytes_per_frame"])
+    # renders without raising, one row per pipeline + header + summary
+    assert len(attribution.perf_text(rep).splitlines()) == 3
+
+
+def test_validate_perf_report_rejects():
+    rep = _report_for(_predict(algorithms.ALGORITHMS["unsharp-m"](),
+                               32, 16))
+    bad = json.loads(json.dumps(rep))           # deep copy
+    bad["pipelines"][0]["efficiency"] = -0.5
+    bad["pipelines"][0]["roofline"]["bound"] = "banana"
+    bad["pipelines"][0]["model"]["traffic_fractions"] = {"hbm": 0.9,
+                                                         "sram": 0.2}
+    errs = attribution.validate_perf_report(bad)
+    assert any("efficiency" in e for e in errs)
+    assert any("roofline.bound" in e for e in errs)
+    assert any("traffic_fractions" in e for e in errs)
+    assert attribution.validate_perf_report({"schema": "nope"})
+    assert attribution.validate_perf_report([1, 2])
+
+
+# ---------------------------------------------------------------- ledger
+def test_ledger_round_trip(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    r1 = ledger.make_row("perf", 0, {"h": 32}, {"fps": 100.0}, ts=1.0,
+                         sha="a" * 40)
+    r2 = ledger.make_row("perf", 0, {"h": 32}, {"fps": 110.0}, ts=2.0,
+                         sha="a" * 40)
+    ledger.append_row(path, r1)
+    ledger.append_row(path, r2)
+    rows = ledger.read_ledger(path)
+    assert rows == [r1, r2]
+    assert ledger.latest_row(rows, "perf")["metrics"]["fps"] == 110.0
+    assert ledger.latest_row(rows, "chaos") is None
+    # same config -> same fingerprint; different config -> different
+    assert r1["config_fingerprint"] == r2["config_fingerprint"]
+    r3 = ledger.make_row("perf", 0, {"h": 64}, {"fps": 1.0})
+    assert r3["config_fingerprint"] != r1["config_fingerprint"]
+
+
+def test_ledger_rejects_corrupt_rows(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    ledger.append_row(path, ledger.make_row("perf", 0, {}, {"fps": 1.0}))
+    with open(path, "a") as f:
+        f.write("{not json\n")
+        f.write(json.dumps({"schema": "wrong/v9"}) + "\n")
+        row = ledger.make_row("perf", 0, {}, {"fps": 2.0})
+        row["metrics"] = {"fps": True}          # bool is not a number
+        f.write(json.dumps(row) + "\n")
+    with pytest.raises(ValueError, match="3 corrupt"):
+        ledger.read_ledger(path)
+    rows, errors = ledger.read_ledger(path, strict=False)
+    assert len(rows) == 1 and len(errors) == 3
+    # append refuses invalid rows outright
+    with pytest.raises(ValueError, match="refusing"):
+        ledger.append_row(path, {"schema": ledger.LEDGER_SCHEMA})
+
+
+def test_validate_row_details():
+    row = ledger.make_row("perf", 0, {"a": 1}, {"m": 1.0})
+    assert ledger.validate_row(row) == []
+    assert ledger.validate_row("nope")
+    bad = dict(row, config_fingerprint="short")
+    assert any("fingerprint" in e for e in ledger.validate_row(bad))
+    bad = dict(row, seed="0")
+    assert any("seed" in e for e in ledger.validate_row(bad))
+    bad = dict(row, metrics={})
+    assert any("metrics" in e for e in ledger.validate_row(bad))
+
+
+# ------------------------------------------------------------------ gate
+BANDS = [ledger.Band("cycles", 1.0, 1.0),
+         ledger.Band("fps", 1 / 1.4, 1.4),
+         ledger.Band("maybe", 0.5, 2.0, required=False)]
+BASE = {"cycles": 1000.0, "fps": 100.0, "maybe": 1.0}
+
+
+def test_gate_quiet_within_tolerance():
+    current = {"cycles": 1000.0, "fps": 108.0}   # noisy but inside band
+    assert ledger.gate(BASE, current, BANDS) == []
+
+
+def test_gate_fires_on_slowdown():
+    slowed = {"cycles": 1000.0, "fps": 50.0}     # the 2x injected stall
+    failures = ledger.gate(BASE, slowed, BANDS)
+    assert len(failures) == 1 and "fps" in failures[0]
+    # deterministic metrics gate exactly: 1 cycle of drift fires
+    drifted = {"cycles": 1001.0, "fps": 100.0}
+    assert any("cycles" in f for f in ledger.gate(BASE, drifted, BANDS))
+
+
+def test_gate_missing_metrics():
+    # required metric absent from current run -> failure
+    assert any("absent from current" in f
+               for f in ledger.gate(BASE, {"cycles": 1000.0}, BANDS))
+    # banded metric absent from the baseline -> config failure
+    assert any("absent from baseline" in f
+               for f in ledger.gate({}, {"cycles": 1000.0},
+                                    [ledger.Band("cycles", 1.0, 1.0)]))
+    # zero baseline compares absolutely
+    zb = [ledger.Band("z", 1.0, 1.0)]
+    assert ledger.gate({"z": 0.0}, {"z": 0.0}, zb) == []
+    assert ledger.gate({"z": 0.0}, {"z": 0.5}, zb)
+
+
+def test_baseline_file_round_trip(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    ledger.write_baseline(path, {"perf": {"metrics": BASE,
+                                          "bands": BANDS}})
+    data = ledger.load_baseline(path)
+    assert ledger.baseline_metrics(data, "perf") == BASE
+    bands = ledger.baseline_bands(data, "perf")
+    assert [b.metric for b in bands] == [b.metric for b in BANDS]
+    assert bands[0] == BANDS[0]
+    assert ledger.baseline_bands(data, "unknown-kind") == []
+    with open(path, "w") as f:
+        json.dump({"schema": "wrong"}, f)
+    with pytest.raises(ValueError, match="schema"):
+        ledger.load_baseline(path)

@@ -1,55 +1,89 @@
-"""Render a captured trace: text flame summary + normalized Perfetto JSON.
+"""Render obs artifacts: trace flame/SLO views and perf attribution.
 
     PYTHONPATH=src python tools/obs_report.py trace.json
     PYTHONPATH=src python tools/obs_report.py trace.json --top 30
     PYTHONPATH=src python tools/obs_report.py trace.json --validate
     PYTHONPATH=src python tools/obs_report.py trace.json --slo
     PYTHONPATH=src python tools/obs_report.py trace.json --out clean.json
+    PYTHONPATH=src python tools/obs_report.py BENCH_perf.json --perf
 
-Input is a trace emitted by any ``--trace out.json`` benchmark flag (or
-``repro.obs.export.write_trace``). The default action prints the
-aggregate flame summary — per span name: call count, total and *self*
-wall time (children subtracted), mean and p95 — which is the terminal
-answer to "where did the milliseconds go". ``--out`` re-writes the trace
-normalized (spans only, schema-stamped) for sharing; open either file in
-ui.perfetto.dev or chrome://tracing for the interactive timeline.
+Input is either a span trace emitted by any ``--trace out.json``
+benchmark flag (``obs_trace/v1``) or a performance-attribution report
+emitted by ``benchmarks/perf_lab.py`` (``perf_report/v1``) — the file's
+``schema`` stamp picks the renderer, ``--perf`` forces the attribution
+view.
 
-``--validate`` exits nonzero if the file fails the exporter's schema
-check; CI runs this over the traced smoke serve so a malformed trace
-artifact can never ship silently.
+For traces the default action prints the aggregate flame summary — per
+span name: call count, total and *self* wall time (children
+subtracted), mean and p95. ``--slo`` switches to the control-plane
+view (deadline misses, shed/reject breakdown, retry histogram).
+``--out`` re-writes the trace normalized for ui.perfetto.dev /
+chrome://tracing.
 
-``--slo`` switches from the flame view to the control-plane view:
-deadline-miss rate, shed/reject breakdown by reason, fallback counts by
-rung, and the retry/backoff-delay histogram — the post-mortem of a
-chaos soak or an overloaded serve, computed entirely from the trace
-file's resilience spans.
+For perf reports the renderer is the model-vs-measured attribution
+table (:func:`repro.perf.attribution.perf_text`): predicted vs
+measured frames/sec, efficiency, bytes amplification, DMA-bound vs
+compute-bound classification, and the engine time split per pipeline.
+
+``--validate`` exits nonzero if the file fails its schema check
+(trace or perf report alike); CI runs this over both smoke artifacts
+so a malformed file can never ship silently.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.obs import export  # noqa: E402
+from repro.perf import attribution  # noqa: E402
+
+
+def _render_perf(path: str, data: dict, validate_only: bool) -> int:
+    errs = attribution.validate_perf_report(data)
+    if errs:
+        print(f"{path}: INVALID perf_report ({len(errs)} schema errors)")
+        for e in errs[:20]:
+            print(f"  - {e}")
+        return 1
+    if validate_only:
+        n = len(data["pipelines"])
+        print(f"{path}: valid perf_report/v1 ({n} pipelines)")
+        return 0
+    print(attribution.perf_text(data))
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="Flame summary + validation for obs trace JSON")
-    ap.add_argument("trace", help="trace JSON file (from --trace runs)")
+        description="Flame/SLO/perf summary + validation for obs "
+                    "artifacts")
+    ap.add_argument("trace", help="artifact JSON: an obs trace (from "
+                                  "--trace runs) or a perf_lab report")
     ap.add_argument("--top", type=int, default=20,
                     help="rows in the flame summary")
     ap.add_argument("--out", default=None, metavar="OUT_JSON",
                     help="write a normalized copy of the trace here")
     ap.add_argument("--validate", action="store_true",
-                    help="exit nonzero if the trace fails the schema check")
+                    help="exit nonzero if the file fails its schema check")
     ap.add_argument("--slo", action="store_true",
                     help="print the SLO summary (deadline misses, "
                          "shed/reject breakdown, retry histogram) instead "
                          "of the flame summary")
+    ap.add_argument("--perf", action="store_true",
+                    help="render the file as a perf_report/v1 attribution "
+                         "table")
     args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        raw = json.load(f)
+    is_perf = args.perf or (isinstance(raw, dict)
+                            and raw.get("schema") == attribution.PERF_SCHEMA)
+    if is_perf:
+        return _render_perf(args.trace, raw, args.validate)
 
     data = export.load_trace(args.trace)
     errs = export.validate_trace(data)
