@@ -35,10 +35,21 @@ The run PASSes only if all of the following hold:
     least one of every fault kind (a chaos harness that injects nothing
     proves nothing).
 
+The frame phase also runs under the live telemetry plane: a
+:class:`~repro.obs.telemetry.TelemetryCollector` samples the engine's
+registry in the background, burn-rate SLO alert rules watch the
+deadline-miss and shed budgets, and a :class:`TelemetryServer` serves
+``/metrics`` which the harness scrapes mid-soak. Two telemetry gates
+close the loop: the burn alert must *fire* under injected faults, and
+under ``--clean`` (zero fault rates, no tight deadlines or bursts — the
+negative control) the same rules must stay silent.
+
 Writes a machine-readable ``BENCH_chaos.json`` (reconciliations, fault
-counts, ULP maxima, gate verdicts); ``--trace out.json`` additionally
-captures the span trace (schema-validated) whose resilience spans feed
-``tools/obs_report.py --slo``.
+counts, ULP maxima, alert states, gate verdicts); ``--trace out.json``
+additionally captures the span trace (schema-validated) whose
+resilience spans feed ``tools/obs_report.py --slo``, and
+``--telemetry-out snap.json`` dumps the collector's ``telemetry/v1``
+snapshot for ``tools/obs_report.py --alerts``.
 """
 from __future__ import annotations
 
@@ -49,6 +60,7 @@ import os
 import sys
 import threading
 import time
+import urllib.request
 
 import numpy as np
 
@@ -61,6 +73,9 @@ from repro.imaging import FrameEngine, FrameRequest  # noqa: E402
 from repro.kernels import ref  # noqa: E402
 from repro.obs import export as obs_export  # noqa: E402
 from repro.obs import trace  # noqa: E402
+from repro.obs.metrics import MetricsRegistry  # noqa: E402
+from repro.obs.telemetry import (TelemetryCollector,  # noqa: E402
+                                 TelemetryServer, default_slo_rules)
 from repro.resilience import (CancelledFrame, FailedFrame,  # noqa: E402
                               Priority, RejectedFrame, ResilienceConfig,
                               RetryPolicy, ShedFrame)
@@ -177,16 +192,25 @@ class Tally:
 
 
 # ------------------------------------------------------------ frame phase
-def soak_frames(args, monkey: ChaosMonkey, dog: Watchdog) -> dict:
+def soak_frames(args, monkey: ChaosMonkey, dog: Watchdog,
+                registry: MetricsRegistry | None = None) -> dict:
     """FrameEngine soak: bursty mixed-priority offered load with chaos
     corruption, tight deadlines every 13th request, oversized bursts
     every 4th round (forcing overload sheds), storms between steps, and
     a scheduled compile *blackout* (rounds 8..11: every compile fails,
     executors evicted) so the fallback ladder demonstrably serves
     frames off the reference rung and the circuit breaker trips and
-    recovers — deterministic, not left to the fault dice."""
+    recovers — deterministic, not left to the fault dice.
+
+    ``--clean`` inverts the phase into the telemetry negative control:
+    no injected faults (the caller zeroes the monkey's rates), no tight
+    deadlines, no oversized bursts, and a full drain every round — the
+    same engine, workload shape, and SLO alert rules, but nothing that
+    should burn error budget. The alert gates assert firing on the
+    chaotic run and silence here; an alert that can't tell these runs
+    apart is noise."""
     eng = FrameEngine(max_batch=4, max_pending=12,
-                      resilience=_resilience(args))
+                      resilience=_resilience(args), registry=registry)
     install_chaos(eng.cache, monkey)
     rng = np.random.default_rng(args.seed)
     h, w = args.shape
@@ -201,10 +225,12 @@ def soak_frames(args, monkey: ChaosMonkey, dog: Watchdog) -> dict:
                 outputs[c.rid] = (c.pipeline, np.asarray(c.output), c.rung)
         dog.kick()
 
+    clean = getattr(args, "clean", False)
     rid = 0
     round_no = 0
     while rid < args.frames:
-        burst = 16 if round_no % 4 == 3 else int(rng.integers(2, 9))
+        burst = (16 if round_no % 4 == 3 and not clean
+                 else int(rng.integers(2, 9)))
         for _ in range(min(burst, args.frames - rid)):
             pipeline = FRAME_PIPELINES[rid % len(FRAME_PIPELINES)]
             frames = {"in": rng.random((h, w), dtype=np.float32)}
@@ -213,7 +239,7 @@ def soak_frames(args, monkey: ChaosMonkey, dog: Watchdog) -> dict:
                 rid=rid, pipeline=pipeline, frames=sent,
                 priority=[Priority.LOW, Priority.NORMAL,
                           Priority.HIGH][rid % 3],
-                deadline_s=5e-4 if rid % 13 == 7 else None)
+                deadline_s=5e-4 if rid % 13 == 7 and not clean else None)
             r = eng.submit(req)
             tally.offered += 1
             if r is True:
@@ -221,14 +247,17 @@ def soak_frames(args, monkey: ChaosMonkey, dog: Watchdog) -> dict:
             else:
                 tally.outcome(r)
             rid += 1
-        if round_no == 8:                       # blackout begins
-            monkey.rates["compile"] = 1.0
-            monkey.injected["evict_storm"] += 1
-            eng.cache.evict_executors()
-        elif round_no == 12:                    # blackout ends
-            monkey.rates["compile"] = BASE_RATES["compile"]
-        monkey.maybe_storm(eng.cache)
+        if not clean:
+            if round_no == 8:                   # blackout begins
+                monkey.rates["compile"] = 1.0
+                monkey.injected["evict_storm"] += 1
+                eng.cache.evict_executors()
+            elif round_no == 12:                # blackout ends
+                monkey.rates["compile"] = BASE_RATES["compile"]
+            monkey.maybe_storm(eng.cache)
         pump()
+        while clean and eng.pending:    # negative control: no backlog,
+            pump()                      # so no overload sheds
         round_no += 1
     while eng.pending or eng._shed_outbox:
         pump()
@@ -451,6 +480,19 @@ def evaluate(report: dict, args) -> list[dict]:
                         for p in ("frame", "rate_limit", "video"))
     gate("workload:frames", total_offered >= args.min_frames,
          f"{total_offered} frames offered (gate {args.min_frames})")
+    alerts = report.get("telemetry", {}).get("alerts", [])
+    fired = {a["rule"]: a["fired_count"] for a in alerts}
+    if getattr(args, "clean", False):
+        # negative control: same engines, same alert rules, no chaos —
+        # the SLO alerts must stay silent for the whole run
+        gate("telemetry:alerts_quiet",
+             bool(alerts) and all(n == 0 for n in fired.values()),
+             "no alert fired" if all(n == 0 for n in fired.values())
+             else "fired: " + ", ".join(r for r, n in fired.items() if n))
+        gate("telemetry:endpoint_live",
+             report.get("telemetry", {}).get("metrics_endpoint_ok", False),
+             "live /metrics scrape parsed mid-soak")
+        return gates
     faults = report["faults"]
     gate("chaos:total", sum(faults.values()) >= args.min_faults,
          f"{sum(faults.values())} faults injected (gate {args.min_faults})")
@@ -466,6 +508,13 @@ def evaluate(report: dict, args) -> list[dict]:
          and (report["frame"]["fallback_frames"]
               + report["video"]["fallback_frames"]) > 0,
          "shed/reject/rate-limit/cancel/fallback all nonzero")
+    burn_fired = sum(n for r, n in fired.items() if r.endswith("_burn"))
+    gate("telemetry:burn_alert_fired", burn_fired > 0,
+         f"{burn_fired} burn-rate firings under injected faults"
+         + ("" if burn_fired else " (alert plane is blind to the burn)"))
+    gate("telemetry:endpoint_live",
+         report.get("telemetry", {}).get("metrics_endpoint_ok", False),
+         "live /metrics scrape parsed mid-soak")
     return gates
 
 
@@ -493,8 +542,15 @@ def main(argv=None) -> int:
                          "without progress")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: smaller frames/loads, same gates")
+    ap.add_argument("--clean", action="store_true",
+                    help="telemetry negative control: zero fault rates, "
+                         "no tight deadlines/bursts — the SLO alerts "
+                         "must stay quiet (chaos gates are skipped)")
     ap.add_argument("--trace", default=None, metavar="OUT_JSON",
                     help="capture a schema-validated span trace")
+    ap.add_argument("--telemetry-out", default=None, metavar="OUT_JSON",
+                    help="write the collector's telemetry/v1 snapshot "
+                         "(series rings + alert states) here")
     ap.add_argument("--out", default="BENCH_chaos.json")
     args = ap.parse_args(argv)
 
@@ -507,20 +563,66 @@ def main(argv=None) -> int:
     if args.trace:
         trace.enable()
 
-    monkey = ChaosMonkey(seed=args.seed, **BASE_RATES)
+    rates = ({k: 0.0 for k in BASE_RATES} if args.clean
+             else dict(BASE_RATES))
+    monkey = ChaosMonkey(seed=args.seed, **rates)
     dog = Watchdog(args.hang_timeout)
+    # live telemetry plane over the frame phase's engine: background
+    # sampler + HTTP endpoint, with the burn-rate SLO rules the gates
+    # assert on (firing under chaos, silent under --clean). Only the
+    # burn rules run here: the p99 queue-wait rule keys off a cumulative
+    # histogram, which first-compile stalls would trip even on a clean
+    # run.
+    registry = MetricsRegistry()
+    rules = [r for r in default_slo_rules(prefix="frame_engine",
+                                          window_s=20.0)
+             if r.kind == "burn_rate"]
+    collector = TelemetryCollector(registry, period_s=0.2, rules=rules)
+    server = TelemetryServer(collector)
+    collector.start()
+    server.start()
     t0 = time.perf_counter()
     report = {"schema": SCHEMA,
               "config": {"seed": args.seed, "frames": args.frames,
                          "video_frames": args.video_frames,
                          "shape": list(args.shape), "smoke": args.smoke,
+                         "clean": args.clean,
                          "rates": dict(monkey.rates)}}
-    report["frame"] = soak_frames(args, monkey, dog)
+    report["frame"] = soak_frames(args, monkey, dog, registry=registry)
+    # scrape the live endpoint mid-soak (between phases, collector and
+    # engine registry still hot) and check the exposition parses
+    try:
+        with urllib.request.urlopen(server.url + "/metrics",
+                                    timeout=5.0) as resp:
+            body = resp.read().decode()
+        endpoint_ok = (resp.status == 200 and "# TYPE" in body
+                       and "frame_engine_frames_offered" in body
+                       and "slo_alert_firing" in body)
+    except OSError:
+        endpoint_ok = False
     report["rate_limit"] = soak_rate_limit(args, dog)
     report["video"] = soak_video(args, monkey, dog)
+    # one final sample so counter deltas from the drain are visible,
+    # then freeze the alert states into the report
+    collector.sample_once()
+    collector.stop()
+    server.stop()
+    report["telemetry"] = {
+        "samples": collector.samples_taken,
+        "series": len(collector.rings),
+        "metrics_endpoint_ok": endpoint_ok,
+        "alerts": collector.alert_snapshot(),
+    }
     report["faults"] = dict(monkey.injected)
     report["wall_s"] = time.perf_counter() - t0
     dog.stop()
+
+    if args.telemetry_out:
+        os.makedirs(os.path.dirname(args.telemetry_out) or ".",
+                    exist_ok=True)
+        with open(args.telemetry_out, "w") as f:
+            json.dump(collector.snapshot(), f, indent=1)
+        print(f"wrote {args.telemetry_out}")
 
     gates = evaluate(report, args)
     report["gates"] = gates
@@ -540,6 +642,11 @@ def main(argv=None) -> int:
 
     print(f"\nchaos soak: {report['wall_s']:.1f}s, "
           f"faults={report['faults']}")
+    tl = report["telemetry"]
+    print(f"  telemetry: {tl['samples']} samples over {tl['series']} "
+          f"series, endpoint_ok={tl['metrics_endpoint_ok']}, alerts: "
+          + (", ".join(f"{a['rule']} fired x{a['fired_count']}"
+                       for a in tl["alerts"]) or "-"))
     for phase in ("frame", "rate_limit", "video"):
         t = report[phase]["tally"]
         print(f"  {phase:<11} offered={t['offered']:>4} "

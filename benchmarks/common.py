@@ -124,12 +124,28 @@ def write_report(path: str | None, report: dict) -> None:
     print(f"wrote {path}")
 
 
-def finish_trace(args, process_name: str, top: int = 12) -> None:
-    """Export + validate the global trace and print its flame summary."""
+def finish_trace(args, process_name: str, top: int = 12,
+                 memtraces: list[dict] | None = None) -> None:
+    """Export + validate the global trace and print its flame summary.
+
+    ``memtraces``: ``memtrace/v1`` dicts to overlay as Perfetto counter
+    tracks, each anchored to its pipeline's first execute span — one
+    file then shows the wall-clock spans *and* the cycle-domain buffer
+    occupancy / port pressure of the design that served them.
+    """
     if not getattr(args, "trace", None):
         return
     data = obs_export.export_global_trace(args.trace,
                                           process_name=process_name)
+    if memtraces:
+        data = obs_export.merge_counter_tracks(data, memtraces)
+        errs = obs_export.validate_trace(data)
+        if errs:
+            raise ValueError("merged counter tracks broke the trace "
+                             "schema: " + "; ".join(errs))
+        obs_export.write_trace(args.trace, data)
     n = sum(e.get("ph") == "X" for e in data["traceEvents"])
-    print(f"wrote {args.trace} ({n} spans)\n"
+    n_c = sum(e.get("ph") == "C" for e in data["traceEvents"])
+    counters = f", {n_c} counter samples" if n_c else ""
+    print(f"wrote {args.trace} ({n} spans{counters})\n"
           + obs_export.flame_summary(data, top=top))

@@ -30,6 +30,11 @@ run (ILP solve, compile, cache, executor calls) plus a small autotuned
 FrameEngine drain (adding dse.autotune and engine-step/queueing spans),
 validates it against the exporter schema, and prints the flame summary —
 so the BENCH artifact ships with an attributable timeline.
+
+``--memtrace out.json`` additionally captures a cycle-level
+``memtrace/v1`` buffer trace (line-buffer occupancy, port pressure,
+allocation waste) of the served plans; combined with ``--trace``, the
+counters are merged into the span trace as Perfetto counter tracks.
 """
 from __future__ import annotations
 
@@ -83,8 +88,8 @@ def bench_rowgroup_cell(cache: PlanCache, name: str, h: int, w: int,
     return cells
 
 
-def run_rowgroup(args, rng) -> dict:
-    cache = PlanCache()
+def run_rowgroup(args, rng, cache: PlanCache | None = None) -> dict:
+    cache = cache if cache is not None else PlanCache()
     rows_list = sorted(set([1] + list(args.rows)))  # R=1 is the reference
     cells = []
     print(f"{'pipeline':>10} {'h':>4} {'w':>5} {'B':>3} {'R':>3} "
@@ -205,6 +210,11 @@ def main(argv=None) -> int:
                     help="also run the recompile-every-frame comparison")
     ap.add_argument("--baseline-frames", type=int, default=2,
                     help="compile-every-frame iterations per cell")
+    ap.add_argument("--memtrace", default=None, metavar="OUT_JSON",
+                    help="capture a memtrace/v1 cycle-level buffer trace "
+                         "of the first pipeline (written here; with "
+                         "--trace, every swept pipeline's counters are "
+                         "also merged into the span trace)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -220,14 +230,29 @@ def main(argv=None) -> int:
               "config": {"pipelines": args.pipelines, "widths": args.widths,
                          "batches": args.batches, "height": args.height,
                          "frames": args.frames, "smoke": args.smoke}}
-    report["rowgroup"] = run_rowgroup(args, rng)
+    cache = PlanCache()
+    report["rowgroup"] = run_rowgroup(args, rng, cache=cache)
     if args.with_baseline:
         report["cached_vs_baseline"] = run_cached(args, rng)
     if args.trace:
         report["traced_engine"] = run_traced_engine(args, rng)
 
+    memtraces = []
+    if args.memtrace:
+        # plans are already resident from the sweep, so this replays the
+        # schedule through the sampler without paying any ILP again
+        memtraces = [cache.memtrace_for(n, min(args.widths), args.height)
+                     for n in args.pipelines]
+        common.write_report(args.memtrace, memtraces[0])
+        for mt in memtraces:
+            s = mt["summary"]
+            print(f"memtrace {mt['pipeline']}: {s['n_buffers']} buffers, "
+                  f"{100.0 * s['waste_frac']:.1f}% alloc waste, worst "
+                  f"port pressure {s['worst_port_pressure']:.2f}")
+
     common.write_report(args.out, report)
-    common.finish_trace(args, process_name="serve_frames")
+    common.finish_trace(args, process_name="serve_frames",
+                        memtraces=memtraces)
 
     if args.smoke:
         r_top = max(args.rows)

@@ -1,0 +1,68 @@
+"""Memtrace walkthrough: cycle-level buffer occupancy for one pipeline.
+
+    PYTHONPATH=src python examples/memtrace_pipeline.py
+
+The no-stall checker proves R1-R3 by walking every buffer cycle by
+cycle; the memtrace plane keeps what that walk throws away. This script
+captures a ``memtrace/v1`` artifact for a compiled pipeline, reads the
+allocation-vs-peak waste table, serves a few traced frames, then merges
+the cycle-domain occupancy curves into the wall-clock trace as Perfetto
+counter tracks — open memtrace_pipeline.json in ui.perfetto.dev and the
+buffer-fill curves sit under the execute span that ran the design.
+"""
+import json
+
+import numpy as np
+
+from repro.imaging import FrameEngine, FrameRequest
+from repro.obs import export, memtrace, trace
+
+W, H = 48, 32
+rng = np.random.RandomState(0)
+
+# 1. engine + cache as usual; memtrace_for() reuses the cached plan, so
+# capturing a memtrace never re-runs the ILP
+trace.enable()
+eng = FrameEngine(max_batch=2, max_pending=16)
+reqs = [FrameRequest(rid=i, pipeline="unsharp-m",
+                     frames={"in": rng.rand(H, W).astype(np.float32)})
+        for i in range(4)]
+eng.run(reqs)
+mt = eng.cache.memtrace_for("unsharp-m", W, H)
+
+# 2. the artifact is schema-stamped JSON; validate before trusting it
+assert memtrace.validate_memtrace(mt) == []
+with open("memtrace_unsharp.json", "w") as f:
+    json.dump(mt, f, indent=1)
+print(f"wrote memtrace_unsharp.json "
+      f"({len(mt['buffers'])} buffers, {mt['cycles']} cycles)\n")
+
+# 3. the waste table: allocation (the plan's real VMEM bill) vs the
+# simulated peak — the paper's memory-efficiency story, per buffer
+print(memtrace.memtrace_text(mt))
+s = mt["summary"]
+print(f"\nalloc {s['alloc_bytes']} B, peak {s['peak_bytes']} B "
+      f"-> waste {s['waste_frac']:.1%}, "
+      f"worst port pressure {s['worst_port_pressure']:.2f}")
+
+# 4. merge the cycle-domain curves into the wall-clock span trace:
+# counter tracks mem:{pipeline}:{buffer} + port:{pipeline}:{stage},
+# anchored to the pipeline's first engine.execute span
+data = export.export_global_trace("memtrace_pipeline.json",
+                                  process_name="memtrace_pipeline")
+data = export.merge_counter_tracks(data, [mt])
+assert export.validate_trace(data) == []
+export.write_trace("memtrace_pipeline.json", data)
+n_c = sum(1 for e in data["traceEvents"] if e["ph"] == "C")
+print(f"\nwrote memtrace_pipeline.json "
+      f"({sum(1 for e in data['traceEvents'] if e['ph'] == 'X')} spans, "
+      f"{n_c} counter samples) — open in ui.perfetto.dev")
+
+# 5. the same capture for an autotuned memory config: the waste columns
+# are directly comparable because the buffers are the same
+mt_tuned = eng.cache.memtrace_for("unsharp-m", W, H, tune=True)
+dw = s["waste_frac"] - mt_tuned["summary"]["waste_frac"]
+print(f"\ntuned mem config: waste {mt_tuned['summary']['waste_frac']:.1%} "
+      f"({dw:+.1%} vs default)")
+
+trace.disable()

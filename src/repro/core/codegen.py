@@ -185,6 +185,49 @@ class PipelinePlan:
             rings[tap_name(p, j)] = rr
         return rings
 
+    def buffer_meta(self) -> dict[str, dict]:
+        """Stable identity + sizing for every buffer this plan embodies.
+
+        The join key of the memory-observability plane: memtrace samples
+        (keyed by buffer name) meet allocation facts (ring rows/bytes,
+        ports, pack, memory kind) here, so occupancy-vs-allocation waste
+        can be computed without reaching into ``alloc``/``vmem_rings``
+        separately. Keys match :meth:`vmem_rings` for VMEM rings
+        (``stage`` / ``producer@t-j``) plus ``producer@ring`` for
+        device-resident frame rings. The ``ring_bytes`` of the
+        line-buffer and temporal-tap entries sum exactly to
+        :attr:`vmem_ring_bytes`.
+        """
+        w_pad = -(-self.w // 128) * 128
+        meta: dict[str, dict] = {}
+        rings = row_group_rings(self.dag, self.alloc.buffers,
+                                self.rows_per_step)
+        for p, rows in rings.items():
+            b = self.alloc.buffers.get(p)
+            meta[p] = {
+                "kind": "line_buffer", "stage": p,
+                "ring_rows": rows, "ring_bytes": rows * w_pad * 4,
+                "n_lines": b.n_lines if b else 0,
+                "n_lines_phys": b.n_lines_phys if b else rows,
+                "pack": b.pack if b else 1,
+                "ports": b.cfg.ports if b else 0,
+                "mem": b.cfg.name if b else "-",
+            }
+        for (p, j), rows in temporal_tap_rings(
+                self.dag, self.rows_per_step).items():
+            meta[tap_name(p, j)] = {
+                "kind": "temporal_tap", "stage": p, "tap": j,
+                "ring_rows": rows, "ring_bytes": rows * w_pad * 4,
+                "pack": 1, "ports": 0, "mem": "-",
+            }
+        for p, d in self.frame_depths.items():
+            if d > 1:
+                meta[f"{p}@ring"] = {
+                    "kind": "frame_ring", "stage": p, "depth": d,
+                    "frames_resident": d - 1,
+                }
+        return meta
+
     @property
     def vmem_ring_bytes(self) -> int:
         """float32 VMEM the Pallas embodiment of this plan allocates."""

@@ -137,6 +137,46 @@ def port_slack(peak_accesses: Mapping[str, int],
     return min(slacks, default=0)
 
 
+def lines_written(s_p: int, t: int, w: int, h: int) -> int:
+    """Lines the producer has started writing by cycle t (0..h).
+
+    The writer emits line ``(t - s_p) // w`` at cycle t, so by then it
+    has touched lines 0..that — ``(t - s_p) // w + 1`` of them. Scalar
+    form; :func:`repro.core.simulate.sample_buffers` vectorizes the same
+    expression and is differential-tested against this one.
+    """
+    return min(max((t - s_p) // w + 1, 0), h)
+
+
+def lines_retired(s_c: int, t: int, w: int, h: int) -> int:
+    """Lines a reader starting at ``s_c`` is *done* with before cycle t.
+
+    Reader access sets use ``first_line = ceil((t - s_c) / W)`` (Eq. 3),
+    so line l is last read at cycle ``s_c + l*W`` and is retired on the
+    next cycle. Count of retired lines at t: ``(t - s_c - 1) // W + 1``,
+    clipped to [0, h].
+    """
+    return min(max((t - s_c - 1) // w + 1, 0), h)
+
+
+def buffer_occupancy(s_p: int, reader_starts: Sequence[int], t: int,
+                     w: int, h: int) -> int:
+    """Live lines resident in a buffer at cycle t (the fill level).
+
+    A line is live from the cycle its writer touches it until every
+    reader has moved past it — occupancy is lines written minus lines
+    retired by the *slowest* (latest-starting) reader. R2 guarantees
+    this never exceeds the physical ring for a valid schedule; the
+    memtrace plane samples it per cycle to show fill ramps, steady
+    state, and allocation waste.
+    """
+    if not reader_starts:
+        return 0
+    return max(lines_written(s_p, t, w, h)
+               - min(lines_retired(s_c, t, w, h) for s_c in reader_starts),
+               0)
+
+
 def required_delay(sh_late: int, w: int) -> int:
     """RHS of the fixed Eq. 12 (disjointness margin)."""
     return w * sh_late

@@ -116,6 +116,11 @@ class FrameEngine:
         self._queues: dict[str, BoundedFifo] = {}
         self.metrics = EngineMetrics(registry=registry,
                                      prefix="frame_engine")
+        # live queue depth for the telemetry plane: spans only show work
+        # that *ran*; the collector needs the standing backlog as a gauge
+        self._pending_gauge = self.metrics.registry.gauge(
+            "frame_engine_pending_frames",
+            help="frames admitted but not yet served")
         # shed outcomes produced at admission time (overload evictions)
         # or by the expiry sweep; flushed into the next step()'s results
         self._shed_outbox: list[ShedFrame] = []
@@ -336,6 +341,7 @@ class FrameEngine:
             self._sweep_expired()
         if self._shed_outbox:
             results, self._shed_outbox = self._shed_outbox, []
+        self._pending_gauge.set(self.pending)
         name, reqs = assemble_batch(
             self._queues, self.max_batch,
             age_of=lambda r: r.submitted_at,

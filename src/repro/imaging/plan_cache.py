@@ -355,6 +355,25 @@ class PlanCache:
         self._store_exec(key, ex)
         return self._wrap(ex)
 
+    def memtrace_for(self, name: str, w: int, h: int,
+                     mem: MemConfig | Mapping[str, MemConfig] | None = None,
+                     rows_per_step: int = 1, tune: bool = False,
+                     max_samples: int = 512) -> dict:
+        """Cycle-level memory trace (``memtrace/v1``) for a cached plan.
+
+        Resolves the plan through the normal cache path (so the ILP is
+        never re-paid and tuned configs trace the tuned plan), then
+        plays one ``h``-row frame through the schedule sampler. This is
+        what the benchmarks' ``--memtrace`` flag and the Perfetto
+        counter-track merge call; the artifact's waste columns join the
+        same ``vmem_ring_bytes`` the executors actually allocate.
+        """
+        from repro.obs import memtrace as _memtrace
+        plan = self.plan_for(name, w, mem=mem, rows_per_step=rows_per_step,
+                             tune=tune)
+        with trace.span("cache.memtrace", pipeline=name, w=w, h=h):
+            return _memtrace.capture(plan, h, max_samples=max_samples)
+
     def evict_executors(self) -> int:
         """Drop every resident executor (plans/tunings stay). The
         cache-eviction-storm surface: the chaos harness calls this

@@ -14,20 +14,38 @@ this design's cycles go":
     registry across engines and caches to get a process-wide telemetry
     plane.
   * :mod:`export <repro.obs.export>` — Chrome/Perfetto ``trace_event``
-    JSON, a structural schema validator (the CI gate), and a text flame
-    summary (``tools/obs_report.py``).
+    JSON, a structural schema validator (the CI gate), a text flame
+    summary (``tools/obs_report.py``), and memtrace counter-track
+    rendering/merging.
+  * :mod:`memtrace <repro.obs.memtrace>` — cycle-level memory-system
+    traces: per-buffer occupancy/port-pressure samples from the
+    schedule simulator, downsampled into schema-stamped ``memtrace/v1``
+    artifacts with allocation-vs-peak waste metrics.
+  * :mod:`telemetry <repro.obs.telemetry>` — the live plane: a
+    background collector sampling any registry into bounded time-series
+    rings, declarative SLO burn-rate alert rules with firing/resolved
+    transitions, and a stdlib HTTP endpoint (``/metrics``, ``/healthz``,
+    ``/snapshot``).
 
 Spans land in a process-global tracer: ``trace.enable()`` lights up the
 ILP solve, autotune search, compile, cache, engine-step and executor
 instrumentation at once; benchmarks expose it as ``--trace out.json``.
 """
-from . import export, metrics, trace
+from . import export, memtrace, metrics, telemetry, trace
+from .memtrace import MEMTRACE_SCHEMA
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                      DEFAULT_TIME_BUCKETS, UNIT_BUCKETS)
+                      DEFAULT_TIME_BUCKETS, UNIT_BUCKETS,
+                      escape_label_value, validate_metric_name)
+from .telemetry import (AlertRule, AlertState, SeriesRing,
+                        TelemetryCollector, TelemetryServer,
+                        TELEMETRY_SCHEMA, default_slo_rules)
 from .trace import TraceEvent, Tracer
 
 __all__ = [
-    "Counter", "DEFAULT_TIME_BUCKETS", "Gauge", "Histogram",
-    "MetricsRegistry", "TraceEvent", "Tracer", "UNIT_BUCKETS",
-    "export", "metrics", "trace",
+    "AlertRule", "AlertState", "Counter", "DEFAULT_TIME_BUCKETS", "Gauge",
+    "Histogram", "MEMTRACE_SCHEMA", "MetricsRegistry", "SeriesRing",
+    "TELEMETRY_SCHEMA", "TelemetryCollector", "TelemetryServer",
+    "TraceEvent", "Tracer", "UNIT_BUCKETS", "escape_label_value",
+    "export", "default_slo_rules", "memtrace", "metrics", "telemetry",
+    "trace", "validate_metric_name",
 ]

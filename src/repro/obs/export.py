@@ -17,6 +17,11 @@ the tools that read timelines:
     subtracts each span's *immediate* children (per-thread timestamp
     containment), so "where did the milliseconds go" reads off the top
     row even when spans nest five deep.
+  * :func:`memtrace_counter_events` / :func:`merge_counter_tracks` —
+    render a ``memtrace/v1`` artifact (obs.memtrace) as Perfetto
+    **counter tracks** (``ph: "C"``) and lay them over the engine spans
+    of an existing trace, so per-buffer occupancy and per-stage port
+    pressure read on the same timeline as the wall-clock work.
 """
 from __future__ import annotations
 
@@ -113,8 +118,8 @@ def validate_trace(data) -> list[str]:
             errs.append(f"{where}: not a dict")
             continue
         ph = e.get("ph")
-        if ph not in ("X", "M"):
-            errs.append(f"{where}: ph must be 'X' or 'M', got {ph!r}")
+        if ph not in ("X", "M", "C"):
+            errs.append(f"{where}: ph must be 'X', 'M' or 'C', got {ph!r}")
             continue
         if not isinstance(e.get("name"), str) or not e["name"]:
             errs.append(f"{where}: missing span name")
@@ -129,7 +134,88 @@ def validate_trace(data) -> list[str]:
                 if not isinstance(v, (int, float)) or v < 0:
                     errs.append(f"{where}: {k} must be a number >= 0, "
                                 f"got {v!r}")
+        elif ph == "C":
+            ts = e.get("ts")
+            if not isinstance(ts, (int, float)) or ts < 0:
+                errs.append(f"{where}: ts must be a number >= 0, got {ts!r}")
+            args = e.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                    isinstance(v, (int, float)) for v in args.values()):
+                errs.append(f"{where}: counter args must be a non-empty "
+                            f"dict of numeric series")
     return errs
+
+
+# ---------------------------------------------------------- counter tracks
+def memtrace_counter_events(mt: dict, t0_us: float, t1_us: float,
+                            pid: int, tid: int = 0) -> list[dict]:
+    """Render one ``memtrace/v1`` dict as Perfetto counter events.
+
+    The memtrace lives in the *cycle* domain; the trace in wall-clock µs.
+    Cycles ``[0, mt['cycles'])`` are mapped linearly onto
+    ``[t0_us, t1_us]`` so the fill ramp, steady state, and drain of one
+    simulated frame read against the span that executed it. Emits one
+    track per buffer (``mem:<pipeline>:<buffer>``, series ``occupancy``
+    and ``capacity``) and one derived pressure track per stage
+    (``port:<pipeline>:<stage>``, series ``pressure`` where 1.0 = every
+    port busy on the worst block).
+    """
+    cycles = max(int(mt.get("cycles", 1)), 1)
+    scale = (t1_us - t0_us) / cycles
+    pipeline = mt.get("pipeline", "?")
+    evs: list[dict] = []
+
+    def counter(name: str, t_cycles, series: dict) -> None:
+        for i, tc in enumerate(t_cycles):
+            evs.append({
+                "name": name, "ph": "C", "cat": "memtrace",
+                "ts": t0_us + tc * scale, "pid": pid, "tid": tid,
+                "args": {k: float(v[i]) for k, v in series.items()},
+            })
+
+    for b in mt.get("buffers", []):
+        cap = [b["capacity"]] * len(b["t"])
+        counter(f"mem:{pipeline}:{b['name']} ({b.get('unit', 'lines')})",
+                b["t"], {"occupancy": b["occupancy"], "capacity": cap})
+    for st in mt.get("stages", []):
+        counter(f"port:{pipeline}:{st['stage']}",
+                st["t"], {"pressure": st["port_pressure"]})
+    return evs
+
+
+def merge_counter_tracks(data: dict, memtraces: list[dict]) -> dict:
+    """Overlay memtrace counter tracks onto an ``obs_trace/v1`` dict.
+
+    Each memtrace is anchored to the first ``engine.execute`` span whose
+    ``pipeline`` attribute matches (fallback: first ``executor.call``
+    with the same pipeline; last resort: the whole trace extent), so one
+    simulated frame's counters sit exactly under one executed frame's
+    span. Mutates and returns ``data``; the result still validates
+    under :func:`validate_trace`.
+    """
+    spans = _span_rows(data)
+    if spans:
+        lo = min(e["ts"] for e in spans)
+        hi = max(e["ts"] + e["dur"] for e in spans)
+    else:
+        lo, hi = 0.0, 1.0
+    pid = next((e.get("pid") for e in spans), os.getpid())
+    for mt in memtraces:
+        pipe = mt.get("pipeline")
+        anchor = None
+        for name in ("engine.execute", "executor.call"):
+            anchor = next(
+                (e for e in spans if e["name"] == name
+                 and (e.get("args") or {}).get("pipeline") == pipe), None)
+            if anchor is not None:
+                break
+        t0, t1 = ((anchor["ts"], anchor["ts"] + anchor["dur"])
+                  if anchor is not None else (lo, hi))
+        if t1 <= t0:
+            t1 = t0 + 1.0
+        data["traceEvents"].extend(
+            memtrace_counter_events(mt, t0, t1, pid=pid))
+    return data
 
 
 # --------------------------------------------------------------------- slo

@@ -43,10 +43,33 @@ DEFAULT_TIME_BUCKETS = tuple(1e-6 * 2 ** k for k in range(28))
 UNIT_BUCKETS = tuple(i / 20 for i in range(1, 21))
 
 _NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+# the exposition-format grammar for metric family names; enforced at
+# registration so a bad name fails at the call site, not in a scraper
+_VALID_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 
 
 def _prom_name(name: str) -> str:
     return _NAME_RE.sub("_", name)
+
+
+def validate_metric_name(name: str) -> str:
+    """Registration-time gate: metric names must already satisfy the
+    Prometheus grammar ``[a-zA-Z_:][a-zA-Z0-9_:]*``. Returns the name;
+    raises ValueError otherwise (silent mangling at render time hid
+    collisions like ``a.b`` / ``a:b`` -> ``a_b``)."""
+    if not isinstance(name, str) or not _VALID_NAME_RE.match(name):
+        raise ValueError(
+            f"invalid metric name {name!r}: must match "
+            f"[a-zA-Z_:][a-zA-Z0-9_:]*")
+    return name
+
+
+def escape_label_value(v: str) -> str:
+    """Escape a label value for the text exposition format: backslash,
+    double-quote, and newline, in that order (backslash first so the
+    other escapes aren't double-escaped)."""
+    return (str(v).replace("\\", r"\\").replace('"', r'\"')
+            .replace("\n", r"\n"))
 
 
 class Counter:
@@ -165,6 +188,7 @@ class MetricsRegistry:
         self._lock = threading.Lock()
 
     def _get(self, name: str, kind, **kw):
+        validate_metric_name(name)
         with self._lock:
             m = self._metrics.get(name)
             if m is None:
@@ -202,8 +226,9 @@ class MetricsRegistry:
         lines: list[str] = []
         for name, m in items:
             pname = _prom_name(name)
-            if m.help:
-                lines.append(f"# HELP {pname} {m.help}")
+            # HELP/TYPE for *every* family (scrapers treat a bare sample
+            # line as untyped); empty help renders as a bare HELP line
+            lines.append(f"# HELP {pname} {m.help}".rstrip())
             if isinstance(m, Counter):
                 lines.append(f"# TYPE {pname} counter")
                 lines.append(f"{pname} {m.value}")

@@ -202,3 +202,108 @@ def perf_text(data: dict) -> str:
         f"(worst {s.get('efficiency_worst', 0):.2f}), "
         f"clock {data.get('clock_hz', 0) / 1e6:.2f} Mpx/s")
     return "\n".join(rows)
+
+
+# ------------------------------------------------------------------ diff
+def _rel(a: float, b: float) -> float:
+    return (b - a) / a if a else 0.0
+
+
+def perf_diff(a: dict, b: dict, tol: float = 0.10) -> dict:
+    """Pipeline-by-pipeline comparison of two ``perf_report/v1`` dicts.
+
+    The regression-triage view against the BENCH ledger: for every
+    (pipeline, h, w) cell present in both reports, the relative deltas
+    of measured fps, predicted fps, efficiency, bytes amplification,
+    and the execute time fraction, flagged when the throughput moves by
+    more than ``tol`` in either direction. Cells present in only one
+    report surface as added/removed rather than silently dropping.
+    """
+    def key(e):
+        return (e["pipeline"], e["h"], e["w"])
+
+    ea = {key(e): e for e in a.get("pipelines", [])}
+    eb = {key(e): e for e in b.get("pipelines", [])}
+    rows: list[dict] = []
+    for k in sorted(set(ea) | set(eb)):
+        pipeline, h, w = k
+        if k not in eb:
+            rows.append({"pipeline": pipeline, "h": h, "w": w,
+                         "status": "removed"})
+            continue
+        if k not in ea:
+            rows.append({"pipeline": pipeline, "h": h, "w": w,
+                         "status": "added",
+                         "fps_b": eb[k]["measured"]["fps"]})
+            continue
+        x, y = ea[k], eb[k]
+        fps_a, fps_b = x["measured"]["fps"], y["measured"]["fps"]
+        d_fps = _rel(fps_a, fps_b)
+        amp_a, amp_b = (x.get("bytes_amplification"),
+                        y.get("bytes_amplification"))
+        tf_a = (x.get("time_fractions") or {}).get("execute")
+        tf_b = (y.get("time_fractions") or {}).get("execute")
+        rows.append({
+            "pipeline": pipeline, "h": h, "w": w,
+            "status": ("regressed" if d_fps < -tol
+                       else "improved" if d_fps > tol else "ok"),
+            "fps_a": fps_a, "fps_b": fps_b, "fps_rel": d_fps,
+            "predicted_fps_rel": _rel(x["predicted_fps"],
+                                      y["predicted_fps"]),
+            "efficiency_a": x["efficiency"], "efficiency_b": y["efficiency"],
+            "bytes_amplification_delta": (
+                amp_b - amp_a if amp_a is not None and amp_b is not None
+                else None),
+            "execute_fraction_delta": (
+                tf_b - tf_a if tf_a is not None and tf_b is not None
+                else None),
+        })
+    compared = [r for r in rows if "fps_rel" in r]
+    return {
+        "tol": tol,
+        "rows": rows,
+        "summary": {
+            "n_compared": len(compared),
+            "n_regressed": sum(r["status"] == "regressed"
+                               for r in compared),
+            "n_improved": sum(r["status"] == "improved" for r in compared),
+            "n_added": sum(r["status"] == "added" for r in rows),
+            "n_removed": sum(r["status"] == "removed" for r in rows),
+            "worst_fps_rel": min((r["fps_rel"] for r in compared),
+                                 default=0.0),
+            "best_fps_rel": max((r["fps_rel"] for r in compared),
+                                default=0.0),
+        },
+    }
+
+
+def perf_diff_text(diff: dict) -> str:
+    """Terminal table of :func:`perf_diff` (obs_report --diff A B)."""
+    tol = diff["tol"]
+    rows = [f"{'pipeline':>14} {'h':>4} {'w':>5} {'A f/s':>9} {'B f/s':>9} "
+            f"{'delta':>8} {'eff A':>6} {'eff B':>6} {'d exec%':>8} "
+            f"{'status':>10}"]
+    for r in diff["rows"]:
+        if "fps_rel" not in r:
+            rows.append(f"{r['pipeline']:>14} {r['h']:>4} {r['w']:>5} "
+                        f"{'-':>9} {r.get('fps_b', 0.0):>9.1f} {'-':>8} "
+                        f"{'-':>6} {'-':>6} {'-':>8} {r['status']:>10}")
+            continue
+        mark = " <-" if r["status"] in ("regressed", "improved") else ""
+        dexec = r["execute_fraction_delta"]
+        rows.append(
+            f"{r['pipeline']:>14} {r['h']:>4} {r['w']:>5} "
+            f"{r['fps_a']:>9.1f} {r['fps_b']:>9.1f} "
+            f"{100.0 * r['fps_rel']:>+7.1f}% "
+            f"{r['efficiency_a']:>6.2f} {r['efficiency_b']:>6.2f} "
+            + (f"{100.0 * dexec:>+7.1f}% " if dexec is not None
+               else f"{'-':>8} ")
+            + f"{r['status']:>10}{mark}")
+    s = diff["summary"]
+    rows.append(
+        f"diff: {s['n_compared']} cells compared (tol ±{100 * tol:.0f}%), "
+        f"{s['n_regressed']} regressed, {s['n_improved']} improved, "
+        f"{s['n_added']} added, {s['n_removed']} removed; "
+        f"worst {100 * s['worst_fps_rel']:+.1f}%, "
+        f"best {100 * s['best_fps_rel']:+.1f}%")
+    return "\n".join(rows)

@@ -147,6 +147,10 @@ class VideoEngine:
         self.warmup_latency_s = self.metrics.registry.histogram(
             "video_engine_warmup_latency_s",
             help="stream open -> first fully-warm output, seconds")
+        # live backlog gauge for the telemetry plane (see FrameEngine)
+        self._pending_gauge = self.metrics.registry.gauge(
+            "video_engine_pending_frames",
+            help="frames admitted but not yet served across streams")
         self._shed_outbox: list[ShedFrame] = []
         if resilience is not None:
             self._admission = AdmissionController(
@@ -503,6 +507,7 @@ class VideoEngine:
             self._sweep_expired()
         if self._shed_outbox:
             results, self._shed_outbox = self._shed_outbox, []
+        self._pending_gauge.set(self.pending)
         live = {sid: s.queue for sid, s in self._sessions.items()}
         sid, frames = assemble_batch(live, self.chunk,
                                      age_of=lambda f: f.submitted_at)

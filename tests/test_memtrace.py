@@ -1,0 +1,274 @@
+"""Memtrace plane: occupancy oracle vs vectorized sampler, capture/
+validate round-trip, downsampling, counter-track merge, waste joins."""
+import copy
+import json
+
+import numpy as np
+
+from repro.core import DP, algorithms, compile_pipeline
+from repro.core.contention import (buffer_occupancy, lines_retired,
+                                   lines_written)
+from repro.core.linebuffer import SP
+from repro.core.simulate import sample_buffers, simulate
+from repro.obs import export, memtrace
+from repro.obs.memtrace import (capture, downsample_max, memtrace_text,
+                                validate_memtrace)
+
+
+def _plan(name="unsharp-m", w=32, mem=DP):
+    dag = algorithms.ALGORITHMS[name]()
+    return dag, compile_pipeline(dag, w, mem=mem)
+
+
+# ------------------------------------------------- scalar oracle vs sampler
+def test_lines_written_edges():
+    # writer touches line 0 at its start cycle, one new line per W cycles
+    assert lines_written(10, 9, 8, 4) == 0
+    assert lines_written(10, 10, 8, 4) == 1
+    assert lines_written(10, 17, 8, 4) == 1
+    assert lines_written(10, 18, 8, 4) == 2
+    assert lines_written(10, 1000, 8, 4) == 4    # clipped at h
+
+
+def test_lines_retired_edges():
+    # line l is last read at s_c + l*W, retired the cycle after
+    assert lines_retired(10, 10, 8, 4) == 0      # still reading line 0
+    assert lines_retired(10, 11, 8, 4) == 1      # line 0 done
+    assert lines_retired(10, 18, 8, 4) == 1      # reading line 1
+    assert lines_retired(10, 19, 8, 4) == 2
+    assert lines_retired(10, 9, 8, 4) == 0
+    assert lines_retired(10, 10**6, 8, 4) == 4
+
+
+def test_occupancy_oracle_matches_vectorized_sampler():
+    """The memtrace sampler's occupancy curves must equal the scalar
+    set-arithmetic oracle cycle-for-cycle — same differential idiom as
+    the MILP-vs-brute-force tests."""
+    for name in ("unsharp-m", "denoise-m", "harris-s"):
+        dag, plan = _plan(name)
+        h = 16
+        samples = sample_buffers(dag, plan.schedule, plan.w, h,
+                                 alloc=plan.alloc, cfg_of=plan.mem_cfg)
+        for p, s in samples.items():
+            if s.kind != "line_buffer":
+                continue
+            s_p = plan.schedule.starts[p]
+            readers = [plan.schedule.starts[e.consumer]
+                       for e in dag.out_edges(p)
+                       if not dag.stages[e.consumer].is_output]
+            for t in range(0, len(s.occupancy), 7):
+                want = buffer_occupancy(s_p, readers, t, plan.w, h)
+                assert s.occupancy[t] == want, (name, p, t)
+
+
+def test_occupancy_bounded_by_physical_ring():
+    """R2 means live lines never exceed the physical ring of a valid
+    plan; the sampler must agree with the checker about that."""
+    for name in ("unsharp-m", "canny-s", "denoise-m"):
+        dag, plan = _plan(name)
+        rep = simulate(dag, plan.schedule, plan.w, 32,
+                       alloc=plan.alloc, cfg_of=plan.mem_cfg)
+        assert rep.ok
+        for p, s in sample_buffers(dag, plan.schedule, plan.w, 32,
+                                   alloc=plan.alloc,
+                                   cfg_of=plan.mem_cfg).items():
+            assert s.peak_occupancy <= s.capacity, (name, p)
+            assert s.conflict_cycles == 0, (name, p)
+
+
+def test_sampler_flags_conflicts_on_underprovisioned_ports():
+    """Re-sampling a DP-scheduled plan as if its memories were
+    single-ported must show conflict stalls — the sampler sees the
+    pressure the checker would reject."""
+    dag, plan = _plan("denoise-m")
+    sp_of = {s: SP for s in plan.mem_cfg}
+    samples = sample_buffers(dag, plan.schedule, plan.w, 16,
+                             alloc=None, cfg_of=sp_of)
+    assert any(s.conflict_cycles > 0 for s in samples.values()
+               if s.kind == "line_buffer")
+
+
+def test_frame_ring_track_for_temporal_pipeline():
+    dag = algorithms.VIDEO_ALGORITHMS["tmotion-t"]()
+    plan = compile_pipeline(dag, 32, mem=DP)
+    h = 16
+    samples = sample_buffers(dag, plan.schedule, plan.w, h,
+                             alloc=plan.alloc, cfg_of=plan.mem_cfg)
+    rings = {k: s for k, s in samples.items() if s.kind == "frame_ring"}
+    assert rings, "temporal pipeline must expose a frame-ring track"
+    for k, s in rings.items():
+        depth = dag.temporal_depths()[s.owner]
+        assert s.unit == "rows"
+        assert s.capacity == depth * h
+        # (depth-1) history frames resident before the write ramp starts
+        assert s.occupancy[0] >= (depth - 1) * h
+        assert s.peak_occupancy == depth * h
+
+
+# ------------------------------------------------------------ downsampling
+def test_downsample_preserves_peak_and_length():
+    rng = np.random.default_rng(0)
+    v = rng.integers(0, 1000, size=5000).astype(np.int32)
+    t, out, stride = downsample_max(v, 64)
+    assert len(t) == len(out) <= 64
+    assert stride == -(-5000 // 64)
+    assert max(out) == v.max()          # max-preserving by construction
+    assert t[0] == 0 and t[1] - t[0] == stride
+
+
+def test_downsample_short_series_is_identity():
+    v = np.arange(10, dtype=np.int32)
+    t, out, stride = downsample_max(v, 64)
+    assert stride == 1
+    assert out == list(range(10))
+    assert downsample_max(np.array([], np.int32), 8) == ([], [], 1)
+
+
+# --------------------------------------------------- capture + schema gate
+def test_capture_round_trips_and_validates():
+    _, plan = _plan()
+    mt = capture(plan, h=24, max_samples=128)
+    assert validate_memtrace(mt) == []
+    rt = json.loads(json.dumps(mt))      # artifact = JSON file on disk
+    assert validate_memtrace(rt) == []
+    assert rt["schema"] == memtrace.MEMTRACE_SCHEMA
+    for b in rt["buffers"]:
+        assert len(b["t"]) == len(b["occupancy"]) <= 128
+    assert "memtrace" in memtrace_text(rt)
+
+
+def test_capture_waste_joins_plan_allocation():
+    """Line-buffer alloc bytes must reconcile exactly with the plan's
+    vmem_ring_bytes (the executor's real VMEM bill)."""
+    for name in ("unsharp-m", "harris-m"):
+        _, plan = _plan(name)
+        mt = capture(plan, h=32)
+        lb_bytes = sum(b["waste"]["alloc_bytes"] for b in mt["buffers"]
+                       if b["kind"] == "line_buffer")
+        assert lb_bytes + mt["summary"]["tap_ring_bytes"] \
+            == plan.vmem_ring_bytes
+        for b in mt["buffers"]:
+            w = b["waste"]
+            assert w["alloc"] >= w["peak"] >= 0
+            assert 0.0 <= w["waste_frac"] <= 1.0
+            assert w["alloc_bytes"] >= w["peak_bytes"]
+
+
+def test_buffer_meta_covers_rings_and_sums():
+    _, plan = _plan("unsharp-m")
+    meta = plan.buffer_meta()
+    ring_names = set(plan.vmem_rings())
+    assert ring_names <= set(meta)
+    total = sum(m["ring_bytes"] for m in meta.values()
+                if m["kind"] in ("line_buffer", "temporal_tap"))
+    assert total == plan.vmem_ring_bytes
+
+
+def test_validate_rejects_corruption():
+    _, plan = _plan()
+    mt = capture(plan, h=16)
+
+    bad = copy.deepcopy(mt)
+    bad["schema"] = "memtrace/v0"
+    assert any("schema" in e for e in validate_memtrace(bad))
+
+    bad = copy.deepcopy(mt)
+    bad["buffers"][0]["occupancy"] = bad["buffers"][0]["occupancy"][:-1]
+    assert any("lengths differ" in e for e in validate_memtrace(bad))
+
+    bad = copy.deepcopy(mt)
+    bad["buffers"][0]["peak_occupancy"] = -1
+    assert any("exceeds" in e for e in validate_memtrace(bad))
+
+    bad = copy.deepcopy(mt)
+    bad["buffers"][0]["waste"]["waste_frac"] = 1.5
+    assert any("waste_frac" in e for e in validate_memtrace(bad))
+
+    bad = copy.deepcopy(mt)
+    del bad["buffers"]
+    assert any("buffers" in e for e in validate_memtrace(bad))
+
+    assert validate_memtrace([1, 2]) != []
+
+
+# ------------------------------------------------------- counter-track merge
+def _fake_trace(pipeline="unsharp-m"):
+    return {
+        "traceEvents": [
+            {"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+             "args": {"name": "t"}},
+            {"name": "engine.step", "ph": "X", "cat": "repro", "ts": 0.0,
+             "dur": 500.0, "pid": 1, "tid": 1, "args": {}},
+            {"name": "engine.execute", "ph": "X", "cat": "repro",
+             "ts": 100.0, "dur": 300.0, "pid": 1, "tid": 1,
+             "args": {"pipeline": pipeline}},
+        ],
+        "displayTimeUnit": "ms",
+        "otherData": {"schema": export.SCHEMA},
+    }
+
+
+def test_counter_merge_validates_and_anchors_to_execute_span():
+    _, plan = _plan("unsharp-m")
+    mt = capture(plan, h=16, max_samples=32)
+    data = export.merge_counter_tracks(_fake_trace(), [mt])
+    assert export.validate_trace(data) == []
+    counters = [e for e in data["traceEvents"] if e["ph"] == "C"]
+    assert counters
+    # every counter sample lands inside the matching execute span
+    assert all(100.0 <= e["ts"] <= 400.0 for e in counters)
+    names = {e["name"] for e in counters}
+    assert any(n.startswith("mem:unsharp-m:") for n in names)
+    assert any(n.startswith("port:unsharp-m:") for n in names)
+    occ = [e for e in counters if e["name"].startswith("mem:")]
+    assert all(set(e["args"]) == {"occupancy", "capacity"} for e in occ)
+
+
+def test_counter_merge_falls_back_to_trace_extent():
+    _, plan = _plan("unsharp-m")
+    mt = capture(plan, h=16, max_samples=16)
+    tr = _fake_trace(pipeline="some-other-pipe")
+    data = export.merge_counter_tracks(tr, [mt])
+    assert export.validate_trace(data) == []
+    counters = [e for e in data["traceEvents"] if e["ph"] == "C"]
+    assert counters
+    assert all(0.0 <= e["ts"] <= 500.0 for e in counters)
+
+
+def test_validator_rejects_bad_counter_events():
+    tr = _fake_trace()
+    tr["traceEvents"].append({"name": "mem:x", "ph": "C", "ts": 1.0,
+                              "pid": 1, "tid": 0,
+                              "args": {"occupancy": "five"}})
+    assert any("numeric" in e for e in export.validate_trace(tr))
+    tr = _fake_trace()
+    tr["traceEvents"].append({"name": "mem:x", "ph": "C", "ts": -1.0,
+                              "pid": 1, "tid": 0, "args": {"v": 1.0}})
+    assert any("ts" in e for e in export.validate_trace(tr))
+
+
+# ------------------------------------------------------------- cache seam
+def test_plan_cache_memtrace_for():
+    from repro.imaging.plan_cache import PlanCache
+    pc = PlanCache()
+    mt = pc.memtrace_for("unsharp-m", 32, 24)
+    assert validate_memtrace(mt) == []
+    assert pc.stats.plan_misses == 1
+    # same plan key: no re-solve, just a re-sample
+    mt2 = pc.memtrace_for("unsharp-m", 32, 24)
+    assert pc.stats.plan_misses == 1 and pc.stats.plan_hits == 1
+    assert mt2["summary"] == mt["summary"]
+
+
+def test_tuned_memtrace_uses_tuned_plan():
+    from repro.imaging.plan_cache import PlanCache
+    pc = PlanCache()
+    mt_def = pc.memtrace_for("denoise-m", 32, 16)
+    mt_tuned = pc.memtrace_for("denoise-m", 32, 16, tune=True)
+    assert validate_memtrace(mt_tuned) == []
+    assert mt_tuned["mem_cfg"] == {
+        s: c.name for s, c in pc.tuning_for("denoise-m", 32)
+        .best.mem_cfg.items()}
+    # same shape either way: the waste columns are directly comparable
+    assert {b["name"] for b in mt_tuned["buffers"]} \
+        == {b["name"] for b in mt_def["buffers"]}
