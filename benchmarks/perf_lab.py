@@ -34,6 +34,17 @@ measures every pipeline clean, re-measures with a deliberate per-frame
 stall of ``(F-1)x`` the clean frame time, and gates injected-vs-clean
 within the same process — deterministic, machine-independent, and CI
 asserts the nonzero exit.
+
+``--depths 1 2 4`` adds the DMA/compute-overlap sweep: every DMA-bound
+pipeline in the selection is re-measured at each prefetch depth through
+the multi-buffered executor, the per-depth plan VMEM is checked against
+``--depth-vmem-budget``, and depth>=2 throughput is gated against the
+depth=1 measurement at ``--depth-tol`` (generous by design: in
+interpret mode the async-copy ring is *emulated*, so the sweep asserts
+"overlap does not fall off a cliff and stays within VMEM budget", while
+the real speedup claim lives in the analytic model's
+``fill + max(steady, dma)`` prediction). The sweep lands in the
+``depth_sweep`` section of the perf artifact and its own ledger row.
 """
 from __future__ import annotations
 
@@ -157,6 +168,7 @@ def run_perf(args, peaks: measure.Peaks, sleep_factor: float = 0.0
     config = {"pipelines": args.pipelines, "widths": args.widths,
               "height": h, "frames": args.frames, "batch": args.batch,
               "seed": args.seed, "smoke": args.smoke,
+              "prefetch_depth": 1,       # attribution cells run synchronous
               "inject_slowdown": sleep_factor}
     report = attribution.build_report(entries, config, peaks, clock)
 
@@ -185,6 +197,96 @@ def run_perf(args, peaks: measure.Peaks, sleep_factor: float = 0.0
         metrics["bytes_amplification_geomean"] = \
             s["bytes_amplification_geomean"]
     return report, metrics
+
+
+# ------------------------------------------------------ depth sweep
+def run_depth_sweep(args) -> tuple[dict, dict, list[str]]:
+    """Measure DMA-bound pipelines at each prefetch depth.
+
+    Returns ``(sweep_section, ledger_metrics, gate_failures)``. Depth 1
+    is always included as the reference; depths beyond 1 only make sense
+    for DMA-bound pipelines (the dse axis), so compute-bound selections
+    fall back to sweeping the first pipeline as a smoke check that the
+    multi-buffered path stays healthy.
+    """
+    depths = sorted(set(args.depths) | {1})
+    cache = PlanCache()
+    h, w = args.height, min(args.widths)
+    rps = rows_per_step_for_tile(h)
+    budget = args.depth_vmem_budget
+    failures: list[str] = []
+    per: dict[str, dict] = {}
+
+    targets, bounds = [], {}
+    for name in args.pipelines:
+        plan = cache.plan_for(name, w, rows_per_step=rps)
+        bounds[name] = perf_model.predict(plan, h).bound
+        if bounds[name] == "dma":
+            targets.append(name)
+    if not targets:
+        targets = list(args.pipelines[:1])
+
+    for name in targets:
+        temporal = cache.dag_for(name).is_temporal()
+        rows = {}
+        for d in depths:
+            plan = cache.plan_for(name, w, rows_per_step=rps,
+                                  prefetch_depth=d)
+            m = perf_model.predict(plan, h)
+            if temporal:
+                ex = cache.video_executor_for(name, h, w, rows_per_step=rps,
+                                              prefetch_depth=d)
+            else:
+                ex = cache.executor_for(name, h, w, batch=args.batch,
+                                        rows_per_step=rps, prefetch_depth=d)
+            meas = measure.measure_executor(
+                ex, args.frames, np.random.RandomState(args.seed))
+            rows[d] = {"prefetch_depth": d,
+                       "fps": meas.fps,
+                       "vmem_ring_bytes": m.vmem_ring_bytes,
+                       "predicted_cycles_per_frame": m.cycles_per_frame,
+                       "bound": m.bound,
+                       "within_budget": (budget is None
+                                         or m.vmem_ring_bytes <= budget)}
+            if not rows[d]["within_budget"]:
+                failures.append(
+                    f"[depth] {name} depth={d}: vmem {m.vmem_ring_bytes} B "
+                    f"exceeds budget {budget} B")
+        # predicted best depth: the dse ranking (cycles, then vmem, then
+        # shallower) restricted to within-budget rows
+        best = min((r for r in rows.values() if r["within_budget"]),
+                   key=lambda r: (r["predicted_cycles_per_frame"],
+                                  r["vmem_ring_bytes"],
+                                  r["prefetch_depth"]),
+                   default=rows[1])
+        ref = rows[1]["fps"]
+        for d in depths:
+            if d == 1 or ref <= 0:
+                continue
+            ratio = rows[d]["fps"] / ref
+            if ratio < args.depth_tol:
+                failures.append(
+                    f"[depth] {name}: depth={d} throughput fell to "
+                    f"{ratio:.2f}x of depth=1 (tolerance {args.depth_tol})")
+        per[name] = {"bound": bounds[name],
+                     "predicted_best_depth": best["prefetch_depth"],
+                     "depths": [rows[d] for d in depths]}
+        fps_txt = "  ".join(f"d{d}={rows[d]['fps']:.1f}f/s" for d in depths)
+        print(f"depth sweep {name}: {fps_txt} "
+              f"(predicted best depth {best['prefetch_depth']})")
+
+    section = {"depths": depths, "vmem_budget": budget,
+               "depth_tol": args.depth_tol, "per_pipeline": per}
+    d_hi = max(depths)
+    metrics = {
+        "pipelines_swept": float(len(per)),
+        "vmem_max_bytes": max(r["vmem_ring_bytes"]
+                              for p in per.values() for r in p["depths"]),
+        f"overlap_speedup_d{d_hi}_geomean": geomean(
+            p["depths"][-1]["fps"] / p["depths"][0]["fps"]
+            for p in per.values() if p["depths"][0]["fps"] > 0),
+    }
+    return section, metrics, failures
 
 
 # ---------------------------------------------------- wrapped sub-suites
@@ -281,6 +383,18 @@ def main(argv=None) -> int:
                     metavar="F", help="negative control: stall each frame "
                     "to F x its clean time and gate injected-vs-clean "
                     "(a working gate exits nonzero)")
+    ap.add_argument("--depths", nargs="+", type=int, default=[],
+                    metavar="D", help="prefetch depths to sweep on "
+                    "DMA-bound pipelines (e.g. --depths 1 2 4); empty "
+                    "skips the sweep")
+    ap.add_argument("--depth-tol", type=float, default=0.25,
+                    help="depth>=2 throughput must stay >= this fraction "
+                    "of depth=1. Interpret mode *emulates* the async-copy "
+                    "ring (tap-heavy pipelines pay ~2x at small frames), "
+                    "so this is a cliff detector, not a speedup gate")
+    ap.add_argument("--depth-vmem-budget", type=int, default=256 * 1024,
+                    help="per-plan VMEM ring budget (bytes) every swept "
+                    "depth must fit in")
     ap.add_argument("--no-gate", action="store_true",
                     help="append to the ledger but skip the regression "
                          "gate")
@@ -316,6 +430,17 @@ def main(argv=None) -> int:
         if report is None:
             return 1
         print(attribution.perf_text(report))
+        if args.depths:
+            sweep, depth_metrics, depth_bad = run_depth_sweep(args)
+            report["depth_sweep"] = sweep
+            failures += depth_bad
+            kind = "depth" + kind_suffix
+            rows[kind] = depth_metrics
+            ledger.append_row(args.ledger, ledger.make_row(
+                kind, args.seed,
+                {"depths": sweep["depths"],
+                 "vmem_budget": sweep["vmem_budget"],
+                 "smoke": args.smoke}, depth_metrics, sha=sha))
         common.write_report(args.out, report)
         kind = "perf" + kind_suffix
         rows[kind] = metrics

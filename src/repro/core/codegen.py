@@ -104,6 +104,60 @@ def tap_name(producer: str, j: int) -> str:
     return f"{producer}@t-{j}"
 
 
+def frame_outputs(dag: PipelineDAG) -> list[str]:
+    """Internal (non-input) temporal producers, in topo order: their
+    frames must round-trip through the caller's frame ring, so the fused
+    kernel emits them as extra outputs. The single definition — the
+    kernel builder and the prefetch-ring sizing must agree on the output
+    set or the DMA accounting drifts from the program."""
+    depths = dag.temporal_depths()
+    return [p for p in dag.topo_order
+            if depths.get(p, 1) > 1 and not dag.stages[p].is_input]
+
+
+def prefetch_rings(dag: PipelineDAG, rows_per_step: int,
+                   prefetch_depth: int) -> dict[str, int]:
+    """VMEM prefetch-ring rows per DMA endpoint at ``prefetch_depth`` > 1.
+
+    With multi-buffered DMA/compute overlap the fused kernel stops
+    streaming I/O through BlockSpec grid slices; instead every feed
+    (input stage or temporal tap) owns an input prefetch ring of
+    ``prefetch_depth`` slots x ``rows_per_step`` rows that
+    ``pltpu.make_async_copy`` fills ahead of compute, and every output
+    (the pipeline output plus each internal temporal producer's frame
+    round-trip) owns a staging ring of the same shape that drains
+    asynchronously behind it. Keys are ``{name}@pf-in`` /
+    ``{name}@pf-out`` — disjoint from the line-buffer and ``@t-j`` tap
+    namespaces. ``prefetch_depth == 1`` is the synchronous BlockSpec
+    path: no rings, empty dict.
+    """
+    if prefetch_depth < 1:
+        raise ValueError(
+            f"prefetch_depth must be >= 1, got {prefetch_depth}")
+    if prefetch_depth == 1:
+        return {}
+    slab = prefetch_depth * rows_per_step
+    rings: dict[str, int] = {}
+    for name in dag.input_stages():
+        rings[f"{name}@pf-in"] = slab
+    for (p, j) in temporal_taps(dag):
+        rings[f"{tap_name(p, j)}@pf-in"] = slab
+    rings[f"{dag.output_stages()[0]}@pf-out"] = slab
+    for p in frame_outputs(dag):
+        rings[f"{p}@pf-out"] = slab
+    return rings
+
+
+def prefetch_ring_bytes(dag: PipelineDAG, rows_per_step: int,
+                        prefetch_depth: int, w: int) -> int:
+    """float32 VMEM footprint of the prefetch rings at line width ``w``
+    (0 at depth 1 — the synchronous path allocates none)."""
+    w_pad = -(-w // 128) * 128
+    return sum(r * w_pad * 4
+               for r in prefetch_rings(dag, rows_per_step,
+                                       prefetch_depth).values())
+
+
 def temporal_taps(dag: PipelineDAG) -> list[tuple[str, int]]:
     """(producer, j) for every history tap a temporal pipeline needs.
 
@@ -146,6 +200,7 @@ class PipelinePlan:
     alloc: Allocation
     mem_cfg: dict[str, MemConfig]
     rows_per_step: int = 1
+    prefetch_depth: int = 1
 
     @property
     def total_alloc_bits(self) -> int:
@@ -165,24 +220,29 @@ class PipelinePlan:
 
     @property
     def cache_key(self) -> tuple:
-        """(pipeline name, width, mem combo, row group) — the plan-cache
-        identity. ``rows_per_step`` is an execution-granularity choice the
-        schedule/allocation are independent of, so plans differing only in
-        it can be derived from each other without re-running the ILP (see
-        PlanCache.plan_for) — but they ARE distinct compiled artifacts:
-        ring physical sizing, VMEM accounting, and the generated executor
-        all change with R."""
+        """(pipeline name, width, mem combo, row group, prefetch depth)
+        — the plan-cache identity. ``rows_per_step`` and
+        ``prefetch_depth`` are execution-granularity choices the
+        schedule/allocation are independent of, so plans differing only
+        in them can be derived from each other without re-running the
+        ILP (see PlanCache.plan_for) — but they ARE distinct compiled
+        artifacts: ring physical sizing, VMEM accounting, and the
+        generated executor all change with R and with depth."""
         return (self.dag.name, self.w, mem_cfg_key(self.mem_cfg),
-                self.rows_per_step)
+                self.rows_per_step, self.prefetch_depth)
 
     def vmem_rings(self) -> dict[str, int]:
-        """Physical VMEM ring rows per buffer for the row-group executor,
-        temporal tap rings included (keyed ``producer@t-j``)."""
+        """Physical VMEM ring rows per buffer for the row-group executor:
+        line-buffer rings, temporal tap rings (keyed ``producer@t-j``),
+        and — at prefetch_depth > 1 — the DMA prefetch rings (keyed
+        ``name@pf-in`` / ``name@pf-out``)."""
         rings = row_group_rings(self.dag, self.alloc.buffers,
                                 self.rows_per_step)
         for (p, j), rr in temporal_tap_rings(self.dag,
                                              self.rows_per_step).items():
             rings[tap_name(p, j)] = rr
+        rings.update(prefetch_rings(self.dag, self.rows_per_step,
+                                    self.prefetch_depth))
         return rings
 
     def buffer_meta(self) -> dict[str, dict]:
@@ -193,10 +253,10 @@ class PipelinePlan:
         ports, pack, memory kind) here, so occupancy-vs-allocation waste
         can be computed without reaching into ``alloc``/``vmem_rings``
         separately. Keys match :meth:`vmem_rings` for VMEM rings
-        (``stage`` / ``producer@t-j``) plus ``producer@ring`` for
-        device-resident frame rings. The ``ring_bytes`` of the
-        line-buffer and temporal-tap entries sum exactly to
-        :attr:`vmem_ring_bytes`.
+        (``stage`` / ``producer@t-j`` / ``name@pf-in|out``) plus
+        ``producer@ring`` for device-resident frame rings. The
+        ``ring_bytes`` of the line-buffer, temporal-tap, and
+        prefetch-ring entries sum exactly to :attr:`vmem_ring_bytes`.
         """
         w_pad = -(-self.w // 128) * 128
         meta: dict[str, dict] = {}
@@ -220,6 +280,16 @@ class PipelinePlan:
                 "ring_rows": rows, "ring_bytes": rows * w_pad * 4,
                 "pack": 1, "ports": 0, "mem": "-",
             }
+        for name, rows in prefetch_rings(
+                self.dag, self.rows_per_step, self.prefetch_depth).items():
+            stage, _, direction = name.rpartition("@")
+            meta[name] = {
+                "kind": "prefetch_ring", "stage": stage,
+                "direction": "in" if direction == "pf-in" else "out",
+                "depth": self.prefetch_depth,
+                "ring_rows": rows, "ring_bytes": rows * w_pad * 4,
+                "pack": 1, "ports": 0, "mem": "-",
+            }
         for p, d in self.frame_depths.items():
             if d > 1:
                 meta[f"{p}@ring"] = {
@@ -230,9 +300,13 @@ class PipelinePlan:
 
     @property
     def vmem_ring_bytes(self) -> int:
-        """float32 VMEM the Pallas embodiment of this plan allocates."""
+        """float32 VMEM the Pallas embodiment of this plan allocates —
+        the row-group rings plus, at prefetch_depth > 1, the extra
+        in-flight DMA slabs of the prefetch rings."""
         return row_group_vmem_bytes(self.dag, self.alloc.buffers,
-                                    self.rows_per_step, self.w)
+                                    self.rows_per_step, self.w) \
+            + prefetch_ring_bytes(self.dag, self.rows_per_step,
+                                  self.prefetch_depth, self.w)
 
     @property
     def frame_depths(self) -> dict[str, int]:
@@ -261,6 +335,7 @@ class PipelinePlan:
             "pipeline": self.dag.name,
             "w": self.w,
             "rows_per_step": self.rows_per_step,
+            "prefetch_depth": self.prefetch_depth,
             "vmem_rings": self.vmem_rings(),
             "vmem_ring_bytes": self.vmem_ring_bytes,
             "frame_depths": self.frame_depths,
@@ -278,9 +353,17 @@ class PipelinePlan:
 
     def fingerprint(self) -> str:
         """sha256 over the canonical plan dict — change detection for
-        serialized plans and cache-consistency assertions."""
-        blob = json.dumps(self.to_dict(), sort_keys=True).encode()
-        return hashlib.sha256(blob).hexdigest()
+        serialized plans, cache-consistency assertions, and the compiled-
+        kernel memo key in kernels/ops.py. Memoized on the instance (the
+        dict walk is not free on a per-call hot path); ``dataclasses.
+        replace`` builds a fresh object, so derived siblings never
+        inherit a stale digest."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            blob = json.dumps(self.to_dict(), sort_keys=True).encode()
+            fp = self.__dict__["_fingerprint"] = \
+                hashlib.sha256(blob).hexdigest()
+        return fp
 
     def pseudo_rtl(self) -> str:
         """Textual dump in the spirit of the generated Verilog."""
@@ -315,7 +398,8 @@ def compile_pipeline(dag: PipelineDAG, w: int,
                      rows_per_step: int = 1,
                      frame_h: int = 0,
                      mem_cfg: MemConfig | Mapping[str, MemConfig] | None = None,
-                     schedule: Schedule | None = None) -> PipelinePlan:
+                     schedule: Schedule | None = None,
+                     prefetch_depth: int = 1) -> PipelinePlan:
     """Front door: DAG + memory spec -> scheduled, allocated plan.
 
     After scheduling, the allocation is validated by the cycle-accurate
@@ -337,17 +421,18 @@ def compile_pipeline(dag: PipelineDAG, w: int,
     """
     with trace.span("compile.pipeline", dag=dag.name, w=w,
                     rows_per_step=rows_per_step,
+                    prefetch_depth=prefetch_depth,
                     reused_schedule=schedule is not None) as sp:
         plan = _compile_pipeline(dag, w, mem, objective, prune,
                                  max_pad_iters, rows_per_step, frame_h,
-                                 mem_cfg, schedule)
+                                 mem_cfg, schedule, prefetch_depth)
         sp.set(vmem_ring_bytes=plan.vmem_ring_bytes)
         return plan
 
 
 def _compile_pipeline(dag, w, mem, objective, prune, max_pad_iters,
                       rows_per_step, frame_h, mem_cfg,
-                      schedule) -> PipelinePlan:
+                      schedule, prefetch_depth) -> PipelinePlan:
     if mem_cfg is not None:
         if mem is not DP:
             raise TypeError("pass either mem= or mem_cfg=, not both")
@@ -384,4 +469,5 @@ def _compile_pipeline(dag, w, mem, objective, prune, max_pad_iters,
         raise ValueError(f"{dag.name}: ring padding did not converge: "
                          f"{rep.violations}")
     return PipelinePlan(dag=dag, w=w, schedule=sched, alloc=alloc,
-                        mem_cfg=cfg_of, rows_per_step=rows_per_step)
+                        mem_cfg=cfg_of, rows_per_step=rows_per_step,
+                        prefetch_depth=prefetch_depth)

@@ -115,6 +115,10 @@ class TuningResult:
     candidates: list[Candidate]         # ranked: candidates[0] is best
     default: Candidate                  # uniform serving default (DP)
     stats: TuneStats
+    # --- DMA/compute-overlap axis (scored on the winning mem combo) ---
+    bound: str = "compute"              # model roofline of the winner
+    best_depth: int = 1                 # ranked prefetch_depth winner
+    depth_candidates: list[dict] = dataclasses.field(default_factory=list)
 
     @property
     def best(self) -> Candidate:
@@ -131,6 +135,9 @@ class TuningResult:
             "best": self.best.to_dict(), "default": self.default.to_dict(),
             "pareto": [c.to_dict() for c in self.pareto()],
             "n_candidates": len(self.candidates),
+            "bound": self.bound,
+            "best_depth": self.best_depth,
+            "depth_candidates": [dict(d) for d in self.depth_candidates],
             "stats": dataclasses.asdict(self.stats),
         }
 
@@ -172,7 +179,9 @@ def autotune(dag: PipelineDAG, w: int,
              rows_per_step: int = 1,
              frame_h: int = 0,
              max_candidates: int = 128,
-             branch_cap: int = 256) -> TuningResult:
+             branch_cap: int = 256,
+             prefetch_depths: Sequence[int] = (1, 2, 4),
+             vmem_budget: int | None = None) -> TuningResult:
     """Search per-stage memory assignments; return the ranked result.
 
     ``options`` is the per-owner choice set; non-owner stages keep the
@@ -186,21 +195,76 @@ def autotune(dag: PipelineDAG, w: int,
     Every returned candidate compiled cleanly and passed the simulator's
     R1/R2/R3 validation inside compile_pipeline; scoring runs one more
     simulate() probe to extract the contention-slack axis.
+
+    ``prefetch_depths`` is the DMA/compute-overlap axis, scored on the
+    winning memory combo *after* the mem search (depth siblings are
+    dataclasses.replace derivations — no re-ILP): only a pipeline the
+    analytic roofline classifies DMA-bound enumerates depth > 1
+    (overlap cannot beat the compute roof, so a compute-bound pipeline
+    never pays the prefetch-ring VMEM), and the ranker minimizes
+    (predicted cycles, VMEM ring bytes) over depths whose VMEM fits
+    ``vmem_budget`` (None = unbounded). Ties on predicted cycles —
+    the analytic model cannot separate depth 2 from 4 — resolve to the
+    shallower ring; the measured depth sweep in benchmarks/perf_lab.py
+    is the empirical referee.
     """
     with trace.span("dse.autotune", pipeline=dag.name, w=w) as sp:
         res = _autotune(dag, w, options, default, rows_per_step, frame_h,
-                        max_candidates, branch_cap)
+                        max_candidates, branch_cap, prefetch_depths,
+                        vmem_budget)
         sp.set(enumerated=res.stats.n_enumerated,
                compiled=res.stats.n_compiled,
                pruned=(res.stats.n_pruned_infeasible
                        + res.stats.n_pruned_branches),
                memo_hits=res.stats.n_sched_memo_hits,
-               truncated=res.stats.truncated)
+               truncated=res.stats.truncated,
+               bound=res.bound, best_depth=res.best_depth)
         return res
 
 
+def _score_depths(plan: PipelinePlan, dag: PipelineDAG, w: int,
+                  frame_h: int, prefetch_depths: Sequence[int],
+                  vmem_budget: int | None) -> tuple[str, int, list[dict]]:
+    """(bound, best_depth, depth candidate rows) for the winning plan.
+
+    Uses the perf model's DMA accounting so the classification here and
+    the prediction in perf_report/v1 can never disagree. The probe
+    height is ``frame_h`` when the caller gave one (temporal tuning
+    already carries it), else ``w`` — bound is height-invariant (both
+    steady and DMA cycles scale with h), so any positive height ranks
+    identically.
+    """
+    # local import: perf.model depends on core; core.dse must not pull
+    # it in at module-import time
+    from repro.perf.model import DMA_BYTES_PER_CYCLE, _hbm_bytes
+    h = frame_h if frame_h > 0 else w
+    steady = h * w
+    fill = int(plan.schedule.starts[dag.output_stages()[0]])
+    dma = -(-_hbm_bytes(plan, h) // DMA_BYTES_PER_CYCLE)
+    bound = "dma" if dma >= steady else "compute"
+    rows: list[dict] = []
+    depths = sorted(set(prefetch_depths) | {1})
+    for d in depths:
+        if d < 1:
+            raise ValueError(f"prefetch_depths must be >= 1, got {d}")
+        if d > 1 and bound != "dma":
+            continue
+        vmem = dataclasses.replace(plan, prefetch_depth=d).vmem_ring_bytes
+        cycles = fill + (max(steady, dma) if d >= 2 else steady + dma)
+        rows.append({
+            "prefetch_depth": d, "vmem_bytes": vmem,
+            "predicted_cycles_per_frame": cycles, "bound": bound,
+            "within_budget": vmem_budget is None or vmem <= vmem_budget,
+        })
+    fits = [r for r in rows if r["within_budget"]] or rows[:1]
+    best = min(fits, key=lambda r: (r["predicted_cycles_per_frame"],
+                                    r["vmem_bytes"], r["prefetch_depth"]))
+    return bound, best["prefetch_depth"], rows
+
+
 def _autotune(dag: PipelineDAG, w: int, options, default, rows_per_step,
-              frame_h, max_candidates, branch_cap) -> TuningResult:
+              frame_h, max_candidates, branch_cap, prefetch_depths,
+              vmem_budget) -> TuningResult:
     t0 = time.perf_counter()
     if isinstance(default, MemConfig):
         base = {s: default for s in dag.stages}
@@ -292,10 +356,14 @@ def _autotune(dag: PipelineDAG, w: int, options, default, rows_per_step,
     _mark_pareto3(cands)
     for c in cands[1:]:             # see Candidate: losers drop their plan
         c.plan = None
+    bound, best_depth, depth_cands = _score_depths(
+        cands[0].plan, dag, w, frame_h, prefetch_depths, vmem_budget)
     stats.tune_s = time.perf_counter() - t0
     return TuningResult(pipeline=dag.name, w=w, rows_per_step=rows_per_step,
                         frame_h=frame_h, candidates=cands,
-                        default=default_cand, stats=stats)
+                        default=default_cand, stats=stats,
+                        bound=bound, best_depth=best_depth,
+                        depth_candidates=depth_cands)
 
 
 # --------------------------------------------------------------- legacy sweep

@@ -94,6 +94,7 @@ class FrameEngine:
                  max_batch: int = 4, max_pending: int = 64,
                  tile_shape: tuple[int, int] = (128, 128),
                  rows_per_step: int = 8,
+                 prefetch_depth: int = 1,
                  autotune: bool = False,
                  registry=None,
                  resilience: ResilienceConfig | None = None):
@@ -109,6 +110,9 @@ class FrameEngine:
         # row-group blocking factor for every executor this engine compiles;
         # clamped per-batch so frames shorter than R still execute
         self.rows_per_step = rows_per_step
+        # DMA/compute overlap depth for every executor this engine
+        # compiles (1 = synchronous BlockSpec streaming)
+        self.prefetch_depth = prefetch_depth
         # opt-in: serve every pipeline with the cache's autotuned memory
         # config (one design-space search per (pipeline, width), memoized)
         self.autotune = autotune
@@ -271,13 +275,15 @@ class FrameEngine:
             with trace.span("engine.execute", pipeline=name, xla=True):
                 outs = [execute_tiled(self.cache, name, r.frames, th,
                                       tw, batch=self.max_batch,
-                                      rows_per_step=rps, tune=tune)
+                                      rows_per_step=rps, tune=tune,
+                                      prefetch_depth=self.prefetch_depth)
                         for r in reqs]
                 for o in outs:       # sync: dt must measure execution,
                     o.block_until_ready()  # not async dispatch
             return outs, self.cache.vmem_bytes()
         ex = self.cache.executor_for(name, h, w, batch=self.max_batch,
-                                     rows_per_step=rps, tune=tune)
+                                     rows_per_step=rps, tune=tune,
+                                     prefetch_depth=self.prefetch_depth)
         with trace.span("engine.assemble", pipeline=name):
             inputs = {n: jnp.stack(pad_batch(
                 [jnp.asarray(r.frames[n], jnp.float32) for r in reqs],

@@ -6,13 +6,14 @@ trace per frame throws that amortization away. The cache has two levels,
 mirroring the two compilation costs:
 
   * **plan level** — keyed by ``(pipeline name, width, mem-config combo,
-    rows_per_step)`` (``PipelinePlan.cache_key``): memoizes
-    ``compile_pipeline`` — the ILP solve, ring allocation, and simulator
-    validation. The schedule/allocation are independent of the row-group
-    factor, so a plan differing from a resident one only in
-    ``rows_per_step`` is *derived* (dataclasses.replace) instead of
+    rows_per_step, prefetch_depth)`` (``PipelinePlan.cache_key``):
+    memoizes ``compile_pipeline`` — the ILP solve, ring allocation, and
+    simulator validation. The schedule/allocation are independent of the
+    row-group factor and the DMA prefetch depth, so a plan differing
+    from a resident one only in ``rows_per_step`` and/or
+    ``prefetch_depth`` is *derived* (dataclasses.replace) instead of
     re-solved — the ILP runs once per (name, width, mem) no matter how
-    many row-group variants are served.
+    many row-group or overlap-depth variants are served.
   * **executor level** — keyed by plan key + (height, batch): memoizes the
     traced + jitted Pallas callable. Height/batch are execution-shape
     parameters the plan itself is independent of (rings size by width
@@ -194,8 +195,8 @@ class PlanCache:
         key, _ = self._plans.popitem(last=False)
         self.stats.plan_evictions += 1
         # executors compiled from this plan identity are equally stale:
-        # exec keys embed the plan key's (name, w, mem, rows_per_step)
-        stale = [k for k in self._execs if k[:4] == key[:4]]
+        # exec keys embed the plan key's (name, w, mem, R, prefetch_depth)
+        stale = [k for k in self._execs if k[:5] == key[:5]]
         for k in stale:
             del self._execs[k]
         self.stats.exec_evictions += len(stale)
@@ -240,7 +241,8 @@ class PlanCache:
 
     def plan_for(self, name: str, w: int,
                  mem: MemConfig | Mapping[str, MemConfig] | None = None,
-                 rows_per_step: int = 1, tune: bool = False) -> PipelinePlan:
+                 rows_per_step: int = 1, tune: bool = False,
+                 prefetch_depth: int = 1) -> PipelinePlan:
         if tune:
             if mem is not None:
                 raise ValueError("tune=True picks the memory config; "
@@ -248,27 +250,31 @@ class PlanCache:
             mem = self.tuned_mem_for(name, w, rows_per_step)
         mem = self.default_mem if mem is None else mem
         mkey = mem_cfg_key(mem)
-        key = (name, w, mkey, rows_per_step)
+        key = (name, w, mkey, rows_per_step, prefetch_depth)
         if key in self._plans:
             self.stats.plan_hits += 1
             self._plans.move_to_end(key)
             return self._plans[key]
         self.stats.plan_misses += 1
-        # the ILP/allocation do not depend on the row group: derive from a
-        # sibling plan (any resident rows_per_step) instead of re-solving
-        sibling = next((p for (n2, w2, m2, _r), p in self._plans.items()
+        # the ILP/allocation do not depend on the row group or the DMA
+        # prefetch depth: derive from a sibling plan (any resident
+        # rows_per_step/prefetch_depth) instead of re-solving
+        sibling = next((p for (n2, w2, m2, _r, _d), p in self._plans.items()
                         if (n2, w2, m2) == (name, w, mkey)), None)
         t0 = time.perf_counter()
         with trace.span("cache.plan", pipeline=name, w=w,
-                        rows_per_step=rows_per_step, hit=False,
+                        rows_per_step=rows_per_step,
+                        prefetch_depth=prefetch_depth, hit=False,
                         derived=sibling is not None):
             if sibling is not None:
                 plan = dataclasses.replace(sibling,
-                                           rows_per_step=rows_per_step)
+                                           rows_per_step=rows_per_step,
+                                           prefetch_depth=prefetch_depth)
             else:
                 plan = self._compile(
                     lambda: compile_pipeline(self.dag_for(name), w, mem=mem,
-                                             rows_per_step=rows_per_step),
+                                             rows_per_step=rows_per_step,
+                                             prefetch_depth=prefetch_depth),
                     f"plan:{name}:{w}")
         self.stats.plan_compile_s += time.perf_counter() - t0
         while len(self._plans) >= self.max_plans:
@@ -277,9 +283,10 @@ class PlanCache:
         return plan
 
     def _exec_key(self, name: str, w: int, mkey: tuple, rows_per_step: int,
-                  *legs) -> tuple:
-        # leading 4 fields == plan cache_key, so plan eviction can find us
-        return (name, w, mkey, rows_per_step) + legs + (self.interpret,)
+                  prefetch_depth: int, *legs) -> tuple:
+        # leading 5 fields == plan cache_key, so plan eviction can find us
+        return (name, w, mkey, rows_per_step, prefetch_depth) \
+            + legs + (self.interpret,)
 
     def _store_exec(self, key: tuple, ex) -> None:
         while len(self._execs) >= self.max_execs:
@@ -291,7 +298,8 @@ class PlanCache:
                      batch: int | None = None,
                      mem: MemConfig | Mapping[str, MemConfig] | None = None,
                      rows_per_step: int = 1,
-                     tune: bool = False) -> StencilExecutor:
+                     tune: bool = False,
+                     prefetch_depth: int = 1) -> StencilExecutor:
         if tune:
             if mem is not None:
                 raise ValueError("tune=True picks the memory config; "
@@ -299,16 +307,18 @@ class PlanCache:
             mem = self.tuned_mem_for(name, w, rows_per_step)
         mem = self.default_mem if mem is None else mem
         key = self._exec_key(name, w, mem_cfg_key(mem), rows_per_step,
-                             "frame", h, batch)
+                             prefetch_depth, "frame", h, batch)
         if key in self._execs:
             self.stats.exec_hits += 1
             self._execs.move_to_end(key)
             return self._wrap(self._execs[key])
-        plan = self.plan_for(name, w, mem=mem, rows_per_step=rows_per_step)
+        plan = self.plan_for(name, w, mem=mem, rows_per_step=rows_per_step,
+                             prefetch_depth=prefetch_depth)
         self.stats.exec_misses += 1
         t0 = time.perf_counter()
         with trace.span("cache.exec", pipeline=name, kind="frame",
-                        h=h, w=w, batch=batch, hit=False):
+                        h=h, w=w, batch=batch,
+                        prefetch_depth=prefetch_depth, hit=False):
             ex = self._compile(
                 lambda: make_executor(self.dag_for(name), h, w, batch=batch,
                                       plan=plan, interpret=self.interpret),
@@ -321,7 +331,8 @@ class PlanCache:
                            chunk: int | None = None,
                            mem: MemConfig | Mapping[str, MemConfig] | None = None,
                            rows_per_step: int = 1,
-                           tune: bool = False) -> VideoExecutor:
+                           tune: bool = False,
+                           prefetch_depth: int = 1) -> VideoExecutor:
         """Streaming (frame-ring) executor — the video analogue of
         :meth:`executor_for`. Also serves spatial DAGs (empty state), so
         the VideoEngine can carry single-frame pipelines as degenerate
@@ -335,16 +346,18 @@ class PlanCache:
             mem = self.tuned_mem_for(name, w, rows_per_step)
         mem = self.default_mem if mem is None else mem
         key = self._exec_key(name, w, mem_cfg_key(mem), rows_per_step,
-                             "video", h, chunk)
+                             prefetch_depth, "video", h, chunk)
         if key in self._execs:
             self.stats.exec_hits += 1
             self._execs.move_to_end(key)
             return self._wrap(self._execs[key])
-        plan = self.plan_for(name, w, mem=mem, rows_per_step=rows_per_step)
+        plan = self.plan_for(name, w, mem=mem, rows_per_step=rows_per_step,
+                             prefetch_depth=prefetch_depth)
         self.stats.exec_misses += 1
         t0 = time.perf_counter()
         with trace.span("cache.exec", pipeline=name, kind="video",
-                        h=h, w=w, chunk=chunk, hit=False):
+                        h=h, w=w, chunk=chunk,
+                        prefetch_depth=prefetch_depth, hit=False):
             ex = self._compile(
                 lambda: make_video_executor(self.dag_for(name), h, w,
                                             plan=plan,
@@ -358,7 +371,8 @@ class PlanCache:
     def memtrace_for(self, name: str, w: int, h: int,
                      mem: MemConfig | Mapping[str, MemConfig] | None = None,
                      rows_per_step: int = 1, tune: bool = False,
-                     max_samples: int = 512) -> dict:
+                     max_samples: int = 512,
+                     prefetch_depth: int = 1) -> dict:
         """Cycle-level memory trace (``memtrace/v1``) for a cached plan.
 
         Resolves the plan through the normal cache path (so the ILP is
@@ -370,7 +384,7 @@ class PlanCache:
         """
         from repro.obs import memtrace as _memtrace
         plan = self.plan_for(name, w, mem=mem, rows_per_step=rows_per_step,
-                             tune=tune)
+                             tune=tune, prefetch_depth=prefetch_depth)
         with trace.span("cache.memtrace", pipeline=name, w=w, h=h):
             return _memtrace.capture(plan, h, max_samples=max_samples)
 

@@ -99,7 +99,8 @@ def execute_tiled(cache: PlanCache, name: str,
                   tile_h: int, tile_w: int,
                   batch: int = 8,
                   rows_per_step: int | None = None,
-                  tune: bool = False) -> jnp.ndarray:
+                  tune: bool = False,
+                  prefetch_depth: int = 1) -> jnp.ndarray:
     """Run pipeline ``name`` over a frame of any size via tiling.
 
     ``images`` holds full-resolution (H, W) inputs; tiles are assembled
@@ -112,9 +113,11 @@ def execute_tiled(cache: PlanCache, name: str,
     other) instead of being padded with dead-weight zero tiles.
 
     ``rows_per_step`` defaults from the tile shape
-    (:func:`rows_per_step_for_tile`); ``tune=True`` serves tiles through
-    the cache's autotuned memory config (tiles share one compiled width,
-    so one search covers the whole frame). Returns the (H, W) output.
+    (:func:`rows_per_step_for_tile`); ``prefetch_depth`` selects the
+    executors' DMA/compute overlap depth; ``tune=True`` serves tiles
+    through the cache's autotuned memory config (tiles share one
+    compiled width, so one search covers the whole frame). Returns the
+    (H, W) output.
     """
     dag = cache.dag_for(name)
     first = next(iter(images.values()))
@@ -133,7 +136,8 @@ def execute_tiled(cache: PlanCache, name: str,
                                for (a, b) in chunk])
                  for n, f in frames.items()}
         ex = cache.executor_for(name, th, tw, batch=len(chunk),
-                                rows_per_step=rows_per_step, tune=tune)
+                                rows_per_step=rows_per_step, tune=tune,
+                                prefetch_depth=prefetch_depth)
         res = ex(tiles)
         for j, (a, b) in enumerate(chunk):
             r_lo, r_hi, c_lo, c_hi = grid.valid_region(a, b)

@@ -56,8 +56,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.codegen import (PipelinePlan, row_group_rings, tap_name,
-                                temporal_tap_rings, temporal_taps)
+from repro.core.codegen import (PipelinePlan, frame_outputs,
+                                prefetch_ring_bytes, row_group_rings,
+                                tap_name, temporal_tap_rings, temporal_taps)
 from repro.obs import trace
 from repro.core.dag import PipelineDAG, window_keys
 
@@ -122,7 +123,8 @@ def _slab_windows(slab: jnp.ndarray, rows_per_step: int, sh: int, sw: int,
 
 def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
                          plan: PipelinePlan | None, interpret: bool,
-                         batch: int | None, rows_per_step: int = 1):
+                         batch: int | None, rows_per_step: int = 1,
+                         prefetch_depth: int = 1):
     """Shared kernel builder for the single-frame and batched executors.
 
     The two variants differ only in rank: ``batch=None`` runs
@@ -131,6 +133,22 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
     stage loop — slab ring reads with per-row top-of-frame masking,
     window assembly with same-producer key dedup, R-row ring writes — is
     identical and lives here exactly once.
+
+    ``prefetch_depth`` selects the I/O discipline around that loop:
+
+      * **1 (default)** — today's synchronous path: row-group blocks
+        stream through BlockSpec grid slices, the Pallas pipeline
+        double-buffers implicitly. Bit-for-bit the historical behavior.
+      * **2 / 4 (multi-buffered)** — inputs and outputs become whole
+        ``pltpu.ANY`` (HBM) operands and every feed/output owns a
+        (depth, R, W_pad) VMEM prefetch/staging ring driven by
+        ``pltpu.make_async_copy``: step t computes from ring slot
+        ``t % depth`` while the DMAs for steps t+1..t+depth-1 are in
+        flight, and output slabs drain asynchronously behind compute —
+        the paper's push-memory overlap, depth slabs deep. Grid steps
+        are linearized ``t = b * n_groups + g`` so one ring and one
+        semaphore array serve the whole batch. Falls back to the
+        synchronous path when ``pltpu`` is unavailable.
 
     Temporal pipelines add two kinds of operands around that same loop:
 
@@ -157,6 +175,11 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
     r = rows_per_step
     if r < 1:
         raise ValueError(f"rows_per_step must be >= 1, got {r}")
+    depth = prefetch_depth
+    if depth < 1:
+        raise ValueError(f"prefetch_depth must be >= 1, got {depth}")
+    if depth > 1 and not _HAVE_PLTPU:  # pragma: no cover
+        depth = 1   # no async-copy primitives: synchronous fallback
     n_groups = -(-h // r)
     h_pad = n_groups * r
     rings = row_group_rings(dag, plan.alloc.buffers if plan else None, r)
@@ -170,14 +193,14 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
                              f"temporal tap naming scheme")
         ring_shapes[name] = (rr, w_pad)
     vmem_bytes = sum(rr * c * 4 for (rr, c) in ring_shapes.values())
+    if depth > 1:
+        vmem_bytes += prefetch_ring_bytes(dag, r, depth, w)
     ring_owners = list(ring_shapes)
     inputs = dag.input_stages()
     feeds = inputs + [tap_name(p, j) for (p, j) in taps]
-    depths = dag.temporal_depths()
     # internal temporal producers: their frames must round-trip through
     # the caller's frame ring, so the kernel emits them as extra outputs
-    frame_outs = [p for p in dag.topo_order
-                  if depths.get(p, 1) > 1 and not dag.stages[p].is_input]
+    frame_outs = frame_outputs(dag)
     out_stage = dag.output_stages()[0]
     # the stage the output stage reads (it streams 1x1 from it)
     final = dag.in_edges(out_stage)[0].producer
@@ -191,20 +214,21 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
     group_axis = 1 if batched else 0    # program_id axis walking row groups
     lead = (0,) if batched else ()      # block-local leading index
 
-    def kernel(*refs):
-        in_refs = {name: refs[i] for i, name in enumerate(feeds)}
-        out_ref = refs[len(feeds)]
-        frame_refs = {p: refs[len(feeds) + 1 + i]
-                      for i, p in enumerate(frame_outs)}
-        ring_refs = {p: refs[len(feeds) + 1 + len(frame_outs) + i]
-                     for i, p in enumerate(ring_owners)}
-        row0 = pl.program_id(group_axis) * r    # first row of this group
+    def stage_pass(read_feed, store_out, store_frame, ring_refs, row0):
+        """The topological stage loop, shared by both I/O disciplines.
 
+        ``read_feed(name)`` yields a feed's (R, w) block for this step;
+        ``store_out(val)`` / ``store_frame(p, val)`` emit the pipeline
+        output and the internal temporal producers' frames. Everything
+        between — tap-ring staging, slab reads, window assembly, ring
+        writes — is identical whether blocks arrive via BlockSpec or
+        through DMA prefetch rings.
+        """
         # stream the history taps into their rings first: consumers later
         # in this same grid step read their slabs like any producer ring
         for (p, j) in taps:
             name = tap_name(p, j)
-            val = in_refs[name][lead + (slice(None), slice(0, w))]
+            val = read_feed(name)
             rr = ring_shapes[name][0]
             pl.store(ring_refs[name],
                      (pl.dslice(jax.lax.rem(row0, rr), r),
@@ -220,7 +244,7 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
             if st.is_output:
                 continue
             if st.is_input:
-                val = in_refs[name][lead + (slice(None), slice(0, w))]
+                val = read_feed(name)
             elif st.fn is None:  # relay: identity on the producer's R rows
                 e = dag.in_edges(name)[0]
                 rr = ring_shapes[e.producer][0]
@@ -247,27 +271,154 @@ def _build_pipeline_call(dag: PipelineDAG, h: int, w: int,
                 slot = jax.lax.rem(row0, rr)
                 pl.store(ring_refs[name],
                          (pl.dslice(slot, r), pl.dslice(0, w)), val)
-            if name in frame_refs:
-                frame_refs[name][lead + (slice(None), slice(0, w))] = val
+            if name in frame_outs:
+                store_frame(name, val)
             if name == final:
-                out_ref[lead + (slice(None), slice(0, w))] = val
+                store_out(val)
 
     if batched:
-        blk, index_map = (1, r, w_pad), (lambda b, g: (b, g, 0))
         grid, out_dims = (batch, n_groups), (batch, h_pad, w_pad)
     else:
-        blk, index_map = (r, w_pad), (lambda g: (g, 0))
         grid, out_dims = (n_groups,), (h_pad, w_pad)
-    in_specs = [pl.BlockSpec(blk, index_map) for _ in feeds]
     n_outs = 1 + len(frame_outs)
-    out_specs = [pl.BlockSpec(blk, index_map)] * n_outs
     out_shape = [jax.ShapeDtypeStruct(out_dims, jnp.float32)] * n_outs
-    if _HAVE_PLTPU:
-        scratch = [pltpu.VMEM(ring_shapes[p], jnp.float32)
-                   for p in ring_owners]
-    else:  # pragma: no cover
-        scratch = [pl.MemorySpace.ANY(ring_shapes[p], jnp.float32)
-                   for p in ring_owners]
+
+    if depth == 1:
+        def kernel(*refs):
+            in_refs = {name: refs[i] for i, name in enumerate(feeds)}
+            out_ref = refs[len(feeds)]
+            frame_refs = {p: refs[len(feeds) + 1 + i]
+                          for i, p in enumerate(frame_outs)}
+            ring_refs = {p: refs[len(feeds) + 1 + len(frame_outs) + i]
+                         for i, p in enumerate(ring_owners)}
+            row0 = pl.program_id(group_axis) * r   # first row of this group
+
+            def read_feed(name):
+                return in_refs[name][lead + (slice(None), slice(0, w))]
+
+            def store_out(val):
+                out_ref[lead + (slice(None), slice(0, w))] = val
+
+            def store_frame(p, val):
+                frame_refs[p][lead + (slice(None), slice(0, w))] = val
+
+            stage_pass(read_feed, store_out, store_frame, ring_refs, row0)
+
+        if batched:
+            blk, index_map = (1, r, w_pad), (lambda b, g: (b, g, 0))
+        else:
+            blk, index_map = (r, w_pad), (lambda g: (g, 0))
+        in_specs = [pl.BlockSpec(blk, index_map) for _ in feeds]
+        out_specs = [pl.BlockSpec(blk, index_map)] * n_outs
+        if _HAVE_PLTPU:
+            scratch = [pltpu.VMEM(ring_shapes[p], jnp.float32)
+                       for p in ring_owners]
+        else:  # pragma: no cover
+            scratch = [pl.MemorySpace.ANY(ring_shapes[p], jnp.float32)
+                       for p in ring_owners]
+    else:
+        outs = ["__out__"] + frame_outs
+        total = (batch if batched else 1) * n_groups
+
+        def kernel(*refs):
+            i = iter(range(len(refs)))
+            hbm_in = {name: refs[next(i)] for name in feeds}
+            hbm_out = {o: refs[next(i)] for o in outs}
+            ring_refs = {p: refs[next(i)] for p in ring_owners}
+            pf_in = {name: refs[next(i)] for name in feeds}
+            pf_out = {o: refs[next(i)] for o in outs}
+            in_sems = {name: refs[next(i)] for name in feeds}
+            out_sems = {o: refs[next(i)] for o in outs}
+
+            g = pl.program_id(group_axis)
+            row0 = g * r
+            # linearized step: the ring/semaphore clock across the batch
+            t = pl.program_id(0) * n_groups + g if batched else g
+            slot = jax.lax.rem(t, depth)
+
+            def in_dma(name, u, s):
+                """Async copy of step u's (R, w_pad) input slab of
+                ``name`` into prefetch slot s."""
+                if batched:
+                    bb = u // n_groups
+                    gg = u - bb * n_groups
+                    src = hbm_in[name].at[bb, pl.dslice(gg * r, r), :]
+                else:
+                    src = hbm_in[name].at[pl.dslice(u * r, r), :]
+                return pltpu.make_async_copy(src, pf_in[name].at[s],
+                                             in_sems[name].at[s])
+
+            def out_dma(o, u, s):
+                """Async drain of staging slot s to step u's output rows."""
+                if batched:
+                    bb = u // n_groups
+                    gg = u - bb * n_groups
+                    dst = hbm_out[o].at[bb, pl.dslice(gg * r, r), :]
+                else:
+                    dst = hbm_out[o].at[pl.dslice(u * r, r), :]
+                return pltpu.make_async_copy(pf_out[o].at[s], dst,
+                                             out_sems[o].at[s])
+
+            @pl.when(t == 0)
+            def _prologue():
+                # fill the pipeline: the first min(depth, total) input
+                # slabs start in flight before any compute
+                for u in range(min(depth, total)):
+                    for name in feeds:
+                        in_dma(name, u, u % depth).start()
+
+            # own slabs must have landed before compute touches them
+            for name in feeds:
+                in_dma(name, t, slot).wait()
+
+            # the staging slot is recycled every ``depth`` steps: its
+            # previous drain must complete before this step overwrites it
+            @pl.when(t >= depth)
+            def _reclaim():
+                for o in outs:
+                    out_dma(o, t - depth, slot).wait()
+
+            def read_feed(name):
+                return pl.load(pf_in[name],
+                               (slot, pl.dslice(0, r), pl.dslice(0, w)))
+
+            def store_out(val):
+                pl.store(pf_out["__out__"],
+                         (slot, pl.dslice(0, r), pl.dslice(0, w)), val)
+
+            def store_frame(p, val):
+                pl.store(pf_out[p],
+                         (slot, pl.dslice(0, r), pl.dslice(0, w)), val)
+
+            stage_pass(read_feed, store_out, store_frame, ring_refs, row0)
+
+            # drain this step behind compute, prefetch depth steps ahead
+            for o in outs:
+                out_dma(o, t, slot).start()
+            nxt = t + depth
+            @pl.when(nxt < total)
+            def _prefetch():
+                for name in feeds:
+                    in_dma(name, nxt, slot).start()
+
+            @pl.when(t == total - 1)
+            def _epilogue():
+                # at the last step u = t - d >= 0 for every d below:
+                # d < min(depth, total) <= total = t + 1
+                for d in range(min(depth, total)):
+                    u = t - d
+                    for o in outs:
+                        out_dma(o, u, jax.lax.rem(u, depth)).wait()
+
+        any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        in_specs = [any_spec for _ in feeds]
+        out_specs = [any_spec] * n_outs
+        scratch = (
+            [pltpu.VMEM(ring_shapes[p], jnp.float32) for p in ring_owners]
+            + [pltpu.VMEM((depth, r, w_pad), jnp.float32) for _ in feeds]
+            + [pltpu.VMEM((depth, r, w_pad), jnp.float32) for _ in outs]
+            + [pltpu.SemaphoreType.DMA((depth,)) for _ in feeds]
+            + [pltpu.SemaphoreType.DMA((depth,)) for _ in outs])
 
     call = pl.pallas_call(
         kernel,
@@ -305,25 +456,37 @@ def _resolve_rows(rows_per_step: int | None,
     return plan.rows_per_step if plan is not None else 1
 
 
+def _resolve_depth(prefetch_depth: int | None,
+                   plan: PipelinePlan | None) -> int:
+    if prefetch_depth is not None:
+        return prefetch_depth
+    return plan.prefetch_depth if plan is not None else 1
+
+
 def make_pipeline_kernel(dag: PipelineDAG, h: int, w: int,
                          plan: PipelinePlan | None = None,
                          interpret: bool = True,
-                         rows_per_step: int | None = None):
+                         rows_per_step: int | None = None,
+                         prefetch_depth: int | None = None):
     """Build a jit-compiled fused executor for ``dag`` on (h, w) images.
 
-    ``rows_per_step`` defaults to the plan's row-group field (1 when no
-    plan). Returns (fn, vmem_bytes): fn maps {input_name: (h, w) float32}
-    to the (h, w) float32 output of the pipeline's output stage.
+    ``rows_per_step`` and ``prefetch_depth`` default to the plan's
+    fields (1 when no plan). Returns (fn, vmem_bytes): fn maps
+    {input_name: (h, w) float32} to the (h, w) float32 output of the
+    pipeline's output stage.
     """
     return _build_pipeline_call(dag, h, w, plan, interpret, batch=None,
                                 rows_per_step=_resolve_rows(rows_per_step,
-                                                            plan))
+                                                            plan),
+                                prefetch_depth=_resolve_depth(
+                                    prefetch_depth, plan))
 
 
 def make_batched_pipeline_kernel(dag: PipelineDAG, batch: int, h: int, w: int,
                                  plan: PipelinePlan | None = None,
                                  interpret: bool = True,
-                                 rows_per_step: int | None = None):
+                                 rows_per_step: int | None = None,
+                                 prefetch_depth: int | None = None):
     """Batched variant: one fused Pallas program over a frame batch.
 
     The grid is (batch, ceil(h/R)); frames execute back-to-back through
@@ -337,7 +500,9 @@ def make_batched_pipeline_kernel(dag: PipelineDAG, batch: int, h: int, w: int,
     """
     return _build_pipeline_call(dag, h, w, plan, interpret, batch=batch,
                                 rows_per_step=_resolve_rows(rows_per_step,
-                                                            plan))
+                                                            plan),
+                                prefetch_depth=_resolve_depth(
+                                    prefetch_depth, plan))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -357,6 +522,7 @@ class StencilExecutor:
     w: int
     batch: int | None
     rows_per_step: int
+    prefetch_depth: int
     vmem_bytes: int
     interpret: bool
     # the ImaGen plan this executor embodies (None for plan-less ad-hoc
@@ -372,7 +538,8 @@ class StencilExecutor:
         # call in a jax.profiler.TraceAnnotation so it lines up with the
         # XLA profile when both are captured
         with trace.span("executor.call", xla=True, pipeline=self.dag.name,
-                        batch=self.batch, rows_per_step=self.rows_per_step):
+                        batch=self.batch, rows_per_step=self.rows_per_step,
+                        prefetch_depth=self.prefetch_depth):
             return self._fn(images)
 
     @property
@@ -384,17 +551,19 @@ def make_executor(dag: PipelineDAG, h: int, w: int,
                   batch: int | None = None,
                   plan: PipelinePlan | None = None,
                   interpret: bool = True,
-                  rows_per_step: int | None = None) -> StencilExecutor:
+                  rows_per_step: int | None = None,
+                  prefetch_depth: int | None = None) -> StencilExecutor:
     """Executor factory: DAG + shape (+ optional plan) -> StencilExecutor."""
     if dag.is_temporal():
         raise ValueError(f"{dag.name} reads frame history; build it with "
                          f"make_video_executor")
     r = _resolve_rows(rows_per_step, plan)
+    d = _resolve_depth(prefetch_depth, plan)
     fn, vmem = _build_pipeline_call(dag, h, w, plan, interpret, batch,
-                                    rows_per_step=r)
+                                    rows_per_step=r, prefetch_depth=d)
     return StencilExecutor(dag=dag, h=h, w=w, batch=batch, rows_per_step=r,
-                           vmem_bytes=vmem, interpret=interpret, plan=plan,
-                           _fn=fn)
+                           prefetch_depth=d, vmem_bytes=vmem,
+                           interpret=interpret, plan=plan, _fn=fn)
 
 
 def init_frame_state(depths: dict[str, int], h: int,
@@ -430,7 +599,8 @@ class VideoExecutor:
     w: int
     chunk: int | None
     rows_per_step: int
-    vmem_bytes: int                 # VMEM rings (spatial + tap)
+    prefetch_depth: int
+    vmem_bytes: int                 # VMEM rings (spatial + tap + prefetch)
     frame_state_bytes: int          # device-resident frame-ring state
     interpret: bool
     depths: dict = dataclasses.field(repr=False)   # producer -> frames
@@ -448,7 +618,8 @@ class VideoExecutor:
                  state: dict[str, jnp.ndarray]
                  ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
         with trace.span("executor.call", xla=True, pipeline=self.dag.name,
-                        chunk=self.chunk, rows_per_step=self.rows_per_step):
+                        chunk=self.chunk, rows_per_step=self.rows_per_step,
+                        prefetch_depth=self.prefetch_depth):
             return self._fn(images, state)
 
     @property
@@ -461,7 +632,8 @@ def make_video_executor(dag: PipelineDAG, h: int, w: int,
                         plan: PipelinePlan | None = None,
                         interpret: bool = True,
                         rows_per_step: int | None = None,
-                        chunk: int | None = None) -> VideoExecutor:
+                        chunk: int | None = None,
+                        prefetch_depth: int | None = None) -> VideoExecutor:
     """Build a streaming executor for a (possibly temporal) pipeline.
 
     Wraps the fused Pallas call with the frame-ring plumbing: history
@@ -471,11 +643,12 @@ def make_video_executor(dag: PipelineDAG, h: int, w: int,
     edges degenerates to the plain executor with empty state.
     """
     r = _resolve_rows(rows_per_step, plan)
+    d = _resolve_depth(prefetch_depth, plan)
     depths = dag.temporal_depths()
     inputs = set(dag.input_stages())
     internal = sorted(p for p in depths if p not in inputs)
     fn, vmem = _build_pipeline_call(dag, h, w, plan, interpret, batch=chunk,
-                                    rows_per_step=r)
+                                    rows_per_step=r, prefetch_depth=d)
     taps = temporal_taps(dag)
 
     @jax.jit
@@ -508,7 +681,7 @@ def make_video_executor(dag: PipelineDAG, h: int, w: int,
         return out, new_state
 
     return VideoExecutor(dag=dag, h=h, w=w, chunk=chunk, rows_per_step=r,
-                         vmem_bytes=vmem,
+                         prefetch_depth=d, vmem_bytes=vmem,
                          frame_state_bytes=sum((d - 1) * h * w * 4
                                                for d in depths.values()),
                          interpret=interpret, depths=dict(depths), plan=plan,

@@ -141,16 +141,21 @@ def capture(plan, h: int, max_samples: int = 512) -> dict:
     # tap rings are VMEM allocation with no simulator-visible occupancy
     # story (history frames stream at exactly slab rate); they still
     # count in the allocation total so the waste summary reconciles
-    # against plan.vmem_ring_bytes
+    # against plan.vmem_ring_bytes. Prefetch staging rings (depth >= 2
+    # DMA/compute overlap) are the same shape of allocation: VMEM the
+    # executor reserves that the cycle simulator never sees.
     tap_bytes = sum(m["ring_bytes"] for m in meta.values()
                     if m["kind"] == "temporal_tap")
-    total_alloc_bytes += tap_bytes
+    pf_bytes = sum(m["ring_bytes"] for m in meta.values()
+                   if m["kind"] == "prefetch_ring")
+    total_alloc_bytes += tap_bytes + pf_bytes
     return {
         "schema": MEMTRACE_SCHEMA,
         "pipeline": plan.dag.name,
         "w": plan.w,
         "h": h,
         "rows_per_step": plan.rows_per_step,
+        "prefetch_depth": plan.prefetch_depth,
         "cycles": cycles,
         "mem_cfg": {s: c.name for s, c in plan.mem_cfg.items()},
         "buffers": buffers,
@@ -159,6 +164,7 @@ def capture(plan, h: int, max_samples: int = 512) -> dict:
             "n_buffers": len(buffers),
             "vmem_ring_bytes": plan.vmem_ring_bytes,
             "tap_ring_bytes": tap_bytes,
+            "prefetch_ring_bytes": pf_bytes,
             "alloc_bytes": total_alloc_bytes,
             "peak_bytes": total_peak_bytes,
             "waste_bytes": max(total_alloc_bytes - total_peak_bytes, 0),

@@ -14,10 +14,16 @@ them so the join in :mod:`attribution` compares like with like):
 
   * **cycles/frame** — the accelerator retires one output pixel per
     cycle in steady state (paper Sec. 5: all stages advance in raster
-    lockstep). A single-frame execution therefore costs
-    ``S_out + h*w`` cycles: the pipeline-fill latency (the output
-    stage's scheduled start cycle, which the ILP minimizes indirectly
-    through buffer occupancy) plus one cycle per pixel.
+    lockstep), so compute costs ``S_out + h*w`` cycles: the
+    pipeline-fill latency (the output stage's scheduled start cycle,
+    which the ILP minimizes indirectly through buffer occupancy) plus
+    one cycle per pixel. Off-chip traffic costs
+    ``hbm_bytes / DMA_BYTES_PER_CYCLE`` DMA cycles on top. At
+    ``prefetch_depth == 1`` (synchronous streaming) the DMA serializes
+    with compute — cycles/frame is the *sum*; at depth >= 2 the
+    prefetch rings overlap the two engines, so cycles/frame is
+    ``fill + max(steady, dma)`` — the roofline ``max`` the push-memory
+    compilers build for.
   * **HBM bytes/frame** — off-chip traffic: every input frame is read
     once, the output written once, each temporal history tap streams one
     full frame in, and each temporal producer writes one frame of ring
@@ -38,6 +44,13 @@ from repro.core.contention import port_slack
 from repro.core.power import power_breakdown
 
 BYTES_PER_PX = 4  # float32 — the only dtype the executors stream today
+
+# Modeled HBM interface width: 4 px/cycle against the 1 px/cycle compute
+# retire rate. A single-stream (input + output) pipeline is then safely
+# compute-bound (0.5 px of traffic per px-cycle), while tap-heavy
+# temporal pipelines and multi-input stacks cross into DMA-bound — the
+# split the dse depth axis keys off.
+DMA_BYTES_PER_CYCLE = 16
 
 
 def exact_fractions(parts: dict[str, float]) -> dict[str, float]:
@@ -70,8 +83,13 @@ class PerfModel:
     h: int
     # --- cycles ---
     fill_cycles: int               # output stage start S_out (pipeline fill)
-    steady_cycles_per_frame: int   # h*w at 1 px/cycle
-    cycles_per_frame: int          # fill + steady (one un-pipelined frame)
+    steady_cycles_per_frame: int   # h*w at 1 px/cycle (compute)
+    dma_cycles_per_frame: int      # hbm bytes / DMA_BYTES_PER_CYCLE
+    prefetch_depth: int            # overlap depth the plan was compiled at
+    bound: str                     # "dma" | "compute" (ties -> dma)
+    # fill + steady + dma at depth 1 (serialized);
+    # fill + max(steady, dma) at depth >= 2 (overlapped)
+    cycles_per_frame: int
     # --- traffic (bytes/frame) ---
     hbm_bytes_per_frame: int
     sram_bytes_per_frame: int
@@ -135,6 +153,13 @@ def predict(plan: PipelinePlan, h: int) -> PerfModel:
     steady = h * plan.w
     hbm = _hbm_bytes(plan, h)
     sram, sram_per = _sram_bytes(plan, h)
+    dma = -(-hbm // DMA_BYTES_PER_CYCLE)
+    # ties classify as dma-bound, matching measure.classify
+    bound = "dma" if dma >= steady else "compute"
+    if plan.prefetch_depth >= 2:
+        cycles = fill + max(steady, dma)     # DMA hides behind compute
+    else:
+        cycles = fill + steady + dma         # synchronous: they serialize
 
     rep = plan.verify(probe_height(dag, plan.alloc))
     slack = port_slack(rep.peak_block_accesses,
@@ -146,7 +171,9 @@ def predict(plan: PipelinePlan, h: int) -> PerfModel:
     return PerfModel(
         pipeline=dag.name, w=plan.w, h=h,
         fill_cycles=fill, steady_cycles_per_frame=steady,
-        cycles_per_frame=fill + steady,
+        dma_cycles_per_frame=dma, prefetch_depth=plan.prefetch_depth,
+        bound=bound,
+        cycles_per_frame=cycles,
         hbm_bytes_per_frame=hbm, sram_bytes_per_frame=sram,
         bytes_per_frame=hbm + sram,
         traffic_fractions=exact_fractions({"hbm": float(hbm),

@@ -125,6 +125,7 @@ class VideoEngine:
     def __init__(self, cache: PlanCache | None = None,
                  chunk: int = 4, max_pending: int = 64,
                  rows_per_step: int = 8,
+                 prefetch_depth: int = 1,
                  autotune: bool = False,
                  registry=None,
                  resilience: ResilienceConfig | None = None):
@@ -136,6 +137,9 @@ class VideoEngine:
         self.chunk = chunk
         self.max_pending = max_pending
         self.rows_per_step = rows_per_step
+        # DMA/compute overlap depth for every streaming executor this
+        # engine compiles (1 = synchronous BlockSpec streaming)
+        self.prefetch_depth = prefetch_depth
         # opt-in: stream through the cache's autotuned memory config (one
         # memoized design-space search per (pipeline, width))
         self.autotune = autotune
@@ -340,7 +344,8 @@ class VideoEngine:
         only on success, so a failed rung leaves the stream resumable."""
         ex = self.cache.video_executor_for(s.pipeline, s.h, s.w, chunk=n,
                                            rows_per_step=rps,
-                                           tune=tune)
+                                           tune=tune,
+                                           prefetch_depth=self.prefetch_depth)
         with trace.span("engine.assemble", pipeline=s.pipeline):
             ins = {name: jnp.stack(
                 [jnp.asarray(f.frames[name], jnp.float32) for f in frames])
@@ -356,7 +361,8 @@ class VideoEngine:
         """Single-frame executor call; same no-state-mutation contract."""
         ex = self.cache.video_executor_for(s.pipeline, s.h, s.w, chunk=None,
                                            rows_per_step=rps,
-                                           tune=tune)
+                                           tune=tune,
+                                           prefetch_depth=self.prefetch_depth)
         with trace.span("engine.execute", pipeline=s.pipeline, xla=True):
             out, new_state = ex(f.frames, s.state)
             out.block_until_ready()

@@ -66,7 +66,7 @@ def test_mem_cfg_key_stable_and_distinct():
 def test_plan_cache_key_matches_cache_identity():
     cache = PlanCache()
     plan = cache.plan_for("unsharp-m", 24)
-    assert plan.cache_key == ("unsharp-m", 24, mem_cfg_key(DP), 1)
+    assert plan.cache_key == ("unsharp-m", 24, mem_cfg_key(DP), 1, 1)
     # the equivalent explicit per-stage spec hits the same cache slot
     full = {s: DP for s in cache.dag_for("unsharp-m").stages}
     assert cache.plan_for("unsharp-m", 24, mem=full) is plan

@@ -1,0 +1,312 @@
+"""DMA/compute overlap: prefetch rings must be a pure scheduling change.
+
+The multi-buffered executor (prefetch_depth >= 2) stages row groups
+through explicit VMEM rings fed by async copies instead of the grid's
+BlockSpec streams; the compute payload is the same traced closure, so
+outputs must match the synchronous depth=1 path exactly — any drift
+means a slot-reuse or drain-ordering bug, not a rounding story. The
+suite asserts bitwise equality first and tolerates <= 3 ULP for the
+same XLA contraction wobble documented in test_row_group.py.
+
+Also covered here: the fused-kernel cache collision fix (kernels keyed
+on plan *content*, not plan presence), its LRU bound, the plan cache's
+depth-sibling derivation, the dse prefetch-depth axis, and the perf
+model's roofline ``max`` under overlap.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import DP, SP, algorithms, compile_pipeline, dse
+from repro.core.codegen import prefetch_ring_bytes, prefetch_rings
+from repro.imaging import PlanCache
+from repro.imaging.tiling import execute_tiled
+from repro.kernels import ops
+from repro.perf import model as perf_model
+
+RNG = np.random.RandomState(11)
+IMAGE = sorted(algorithms.ALGORITHMS)
+VIDEO = sorted(algorithms.VIDEO_ALGORITHMS)
+
+
+@pytest.fixture(scope="module")
+def cache():
+    return PlanCache()
+
+
+def assert_overlap_equal(got, exp):
+    got, exp = np.asarray(got), np.asarray(exp)
+    if (got == exp).all():
+        return
+    np.testing.assert_array_max_ulp(got, exp, maxulp=3)
+
+
+# ------------------------------------------------------------ equivalence
+@pytest.mark.parametrize("name", IMAGE)
+@pytest.mark.parametrize("depth", [2, 4])
+def test_single_frame_overlap_matches_depth1(cache, name, depth):
+    """Every image pipeline, R=8, h % R != 0: the partial tail group and
+    the ring drain must both be handled."""
+    h, w = 21, 24
+    img = RNG.rand(h, w).astype(np.float32)
+    exp = cache.executor_for(name, h, w, rows_per_step=8)({"in": img})
+    got = cache.executor_for(name, h, w, rows_per_step=8,
+                             prefetch_depth=depth)({"in": img})
+    assert got.shape == (h, w)
+    assert_overlap_equal(got, exp)
+
+
+@pytest.mark.parametrize("name", ["canny-m", "unsharp-m"])
+def test_r1_overlap_matches_depth1(cache, name):
+    """R=1 streams one row per DMA slot — depth beats total row count at
+    small h, exercising the prologue clamp min(depth, total)."""
+    h, w = 3, 24
+    img = RNG.rand(h, w).astype(np.float32)
+    exp = cache.executor_for(name, h, w, rows_per_step=1)({"in": img})
+    got = cache.executor_for(name, h, w, rows_per_step=1,
+                             prefetch_depth=4)({"in": img})
+    assert_overlap_equal(got, exp)
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_batched_overlap_matches_depth1(cache, depth):
+    """Batched grid: the linearized step index crosses frame boundaries
+    mid-ring, so slot addressing must decompose t -> (frame, group)."""
+    b, h, w = 3, 21, 24
+    frames = RNG.rand(b, h, w).astype(np.float32)
+    exp = cache.executor_for("harris-s", h, w, batch=b, rows_per_step=8)(
+        {"in": frames})
+    got = cache.executor_for("harris-s", h, w, batch=b, rows_per_step=8,
+                             prefetch_depth=depth)({"in": frames})
+    for i in range(b):
+        assert_overlap_equal(got[i], exp[i])
+
+
+def test_tiled_overlap_matches_depth1(cache):
+    h, w = 50, 100
+    img = RNG.rand(h, w).astype(np.float32)
+    exp = execute_tiled(cache, "canny-m", {"in": img}, 40, 48, batch=4)
+    got = execute_tiled(cache, "canny-m", {"in": img}, 40, 48, batch=4,
+                        prefetch_depth=2)
+    assert_overlap_equal(got, exp)
+
+
+def _run_stream(ex, vid):
+    state, outs = ex.init_state(), []
+    for t in range(vid.shape[0]):
+        o, state = ex({"in": vid[t]}, state)
+        outs.append(np.asarray(o))
+    return np.stack(outs)
+
+
+@pytest.mark.parametrize("name", VIDEO)
+@pytest.mark.parametrize("depth", [2, 4])
+def test_video_overlap_matches_depth1(cache, name, depth):
+    """Temporal pipelines: history taps ride the prefetch ring and
+    internal producers drain through the output ring — the frame ring
+    state crossing calls must stay bit-compatible."""
+    t_frames, h, w = 5, 21, 24
+    vid = RNG.rand(t_frames, h, w).astype(np.float32)
+    exp = _run_stream(cache.video_executor_for(name, h, w,
+                                               rows_per_step=8), vid)
+    got = _run_stream(cache.video_executor_for(name, h, w, rows_per_step=8,
+                                               prefetch_depth=depth), vid)
+    assert_overlap_equal(got, exp)
+
+
+# ------------------------------------------------- plan / VMEM accounting
+@pytest.mark.parametrize("name", ["canny-m", "tmotion-t"])
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_buffer_meta_reconciles_vmem_at_depth(cache, name, depth):
+    """Sum of per-buffer ring_bytes (line buffers + tap rings + prefetch
+    rings) must equal plan.vmem_ring_bytes at every depth, and the
+    prefetch entries must appear exactly when depth > 1."""
+    plan = cache.plan_for(name, 24, rows_per_step=8, prefetch_depth=depth)
+    meta = plan.buffer_meta()
+    ring_kinds = ("line_buffer", "temporal_tap", "prefetch_ring")
+    total = sum(m["ring_bytes"] for m in meta.values()
+                if m["kind"] in ring_kinds)
+    assert total == plan.vmem_ring_bytes
+    pf = {k: m for k, m in meta.items() if m["kind"] == "prefetch_ring"}
+    if depth == 1:
+        assert not pf
+    else:
+        dag = cache.dag_for(name)
+        rings = prefetch_rings(dag, 8, depth)
+        assert set(pf) == set(rings)
+        assert sum(m["ring_bytes"] for m in pf.values()) == \
+            prefetch_ring_bytes(dag, 8, depth, plan.w)
+        assert all(m["depth"] == depth for m in pf.values())
+        # one staging ring per input feed (inputs + taps) and one per
+        # emitted plane (output + internal temporal producers)
+        assert any(k.endswith("@pf-in") for k in pf)
+        assert any(k.endswith("@pf-out") for k in pf)
+
+
+def test_depth_sibling_derived_without_recompile():
+    """A plan differing only in prefetch_depth is a dataclasses.replace
+    of its resident sibling: same schedule/alloc objects, no second ILP
+    solve, distinct cache identity and fingerprint, bigger VMEM."""
+    cache = PlanCache()
+    p1 = cache.plan_for("unsharp-m", 24, rows_per_step=8)
+    solve_s = cache.stats.plan_compile_s
+    p2 = cache.plan_for("unsharp-m", 24, rows_per_step=8, prefetch_depth=2)
+    assert p2 is not p1
+    assert (p1.prefetch_depth, p2.prefetch_depth) == (1, 2)
+    assert p2.cache_key[:4] == p1.cache_key[:4]
+    assert p2.cache_key != p1.cache_key
+    assert p2.schedule is p1.schedule and p2.alloc is p1.alloc
+    assert cache.stats.plan_compile_s - solve_s < solve_s
+    assert p2.vmem_ring_bytes > p1.vmem_ring_bytes
+    assert p2.fingerprint() != p1.fingerprint()
+    assert cache.plan_for("unsharp-m", 24, rows_per_step=8,
+                          prefetch_depth=2) is p2
+
+
+def test_executor_keys_and_carries_depth(cache):
+    e1 = cache.executor_for("harris-s", 16, 24, rows_per_step=8)
+    e2 = cache.executor_for("harris-s", 16, 24, rows_per_step=8,
+                            prefetch_depth=2)
+    assert e1 is not e2
+    assert (e1.prefetch_depth, e2.prefetch_depth) == (1, 2)
+    assert cache.executor_for("harris-s", 16, 24, rows_per_step=8,
+                              prefetch_depth=2) is e2
+    # staging rings are real VMEM: the deep executor reserves more
+    assert e2.vmem_bytes > e1.vmem_bytes
+    assert e2.vmem_bytes == cache.plan_for(
+        "harris-s", 24, rows_per_step=8, prefetch_depth=2).vmem_ring_bytes
+
+
+def test_prefetch_rings_rejects_bad_depth():
+    dag = algorithms.ALGORITHMS["unsharp-m"]()
+    with pytest.raises(ValueError):
+        prefetch_rings(dag, 8, 0)
+    assert prefetch_rings(dag, 8, 1) == {}
+    assert prefetch_ring_bytes(dag, 8, 1, 24) == 0
+
+
+# ------------------------------------------------- fused-kernel cache fix
+def test_kernel_cache_keys_on_plan_content():
+    """Regression for the cache collision: two plans at the same
+    (pipeline, h, w, R) differing only in mem config must compile
+    distinct kernels. The pre-fix key reduced the plan to ``is not
+    None``, so the second lookup silently reused the first kernel."""
+    dag = algorithms.ALGORITHMS["unsharp-m"]()
+    p_dp = compile_pipeline(dag, 24, mem=DP)
+    p_sp = compile_pipeline(dag, 24, mem=SP)
+    assert p_dp.fingerprint() != p_sp.fingerprint()
+    ops._PIPE_CACHE.clear()
+    img = {"in": RNG.rand(16, 24).astype(np.float32)}
+    a = ops.fused_pipeline(dag, img, plan=p_dp)
+    b = ops.fused_pipeline(dag, img, plan=p_sp)
+    assert ops._PIPE_CACHE.stats.misses == 2
+    assert ops._PIPE_CACHE.stats.hits == 0
+    assert len(ops._PIPE_CACHE) == 2
+    assert_overlap_equal(a, b)          # same math, distinct kernels
+    # depth siblings must also miss — and report their own VMEM
+    p_d4 = dataclasses.replace(p_dp, prefetch_depth=4, rows_per_step=8)
+    v1 = ops.pipeline_vmem_bytes(dag, 16, 24, plan=p_dp)
+    v4 = ops.pipeline_vmem_bytes(dag, 16, 24, plan=p_d4)
+    assert v4 > v1
+    assert ops._PIPE_CACHE.stats.misses == 3    # p_dp vmem probe hits
+
+
+def test_kernel_cache_lru_bounded():
+    c = ops._KernelCache(max_entries=2)
+    c.get_or_build(("a",), lambda: ("fa", 0))
+    c.get_or_build(("b",), lambda: ("fb", 1))
+    assert c.get_or_build(("a",), lambda: ("never", -1)) == ("fa", 0)
+    c.get_or_build(("c",), lambda: ("fc", 2))   # evicts b (LRU), keeps a
+    assert ("a",) in c and ("c",) in c and ("b",) not in c
+    assert len(c) == 2
+    assert (c.stats.hits, c.stats.misses, c.stats.evictions) == (1, 3, 1)
+    c.get_or_build(("b",), lambda: ("fb2", 3))  # rebuild after eviction
+    assert c.stats.misses == 4 and c.stats.evictions == 2
+    with pytest.raises(ValueError):
+        ops._KernelCache(max_entries=0)
+
+
+# ------------------------------------------------------ dse depth axis
+def test_autotune_compute_bound_stays_shallow():
+    """A compute-bound pipeline never enumerates depth > 1: overlap
+    cannot beat the compute roof, so the prefetch VMEM is pure waste."""
+    dag = algorithms.ALGORITHMS["unsharp-m"]()
+    res = dse.autotune(dag, 24, options=(DP,))
+    assert res.bound == "compute"
+    assert res.best_depth == 1
+    assert [r["prefetch_depth"] for r in res.depth_candidates] == [1]
+    d = res.to_dict()
+    assert d["bound"] == "compute" and d["best_depth"] == 1
+
+
+def test_autotune_dma_bound_enumerates_depths():
+    dag = algorithms.VIDEO_ALGORITHMS["tdenoise-t"]()
+    res = dse.autotune(dag, 24, options=(DP,), frame_h=24)
+    assert res.bound == "dma"
+    rows = {r["prefetch_depth"]: r for r in res.depth_candidates}
+    assert set(rows) == {1, 2, 4}
+    assert all(r["bound"] == "dma" for r in rows.values())
+    # overlap strictly beats serialization when DMA-bound; the model
+    # cannot split 2 from 4, so ties resolve to the shallower ring
+    assert rows[2]["predicted_cycles_per_frame"] \
+        < rows[1]["predicted_cycles_per_frame"]
+    assert res.best_depth == 2
+    assert rows[4]["vmem_bytes"] > rows[2]["vmem_bytes"] \
+        > rows[1]["vmem_bytes"]
+    # the winning *plan* stays depth 1: serving opts in via the plan
+    # cache's depth-sibling derivation
+    assert res.best.plan.prefetch_depth == 1
+
+
+def test_autotune_depth_respects_vmem_budget():
+    dag = algorithms.VIDEO_ALGORITHMS["tdenoise-t"]()
+    free = dse.autotune(dag, 24, options=(DP,), frame_h=24)
+    assert free.best_depth > 1
+    d1_vmem = next(r["vmem_bytes"] for r in free.depth_candidates
+                   if r["prefetch_depth"] == 1)
+    tight = dse.autotune(dag, 24, options=(DP,), frame_h=24,
+                         vmem_budget=d1_vmem)
+    assert tight.best_depth == 1
+    over = [r for r in tight.depth_candidates if not r["within_budget"]]
+    assert over and all(r["prefetch_depth"] > 1 for r in over)
+
+
+# ------------------------------------------------------ perf model
+def test_model_serializes_dma_at_depth1(cache):
+    m = perf_model.predict(cache.plan_for("tdenoise-t", 24), 24)
+    assert m.prefetch_depth == 1
+    assert m.cycles_per_frame == (m.fill_cycles + m.steady_cycles_per_frame
+                                  + m.dma_cycles_per_frame)
+    assert m.bound == "dma"
+
+
+def test_model_overlaps_dma_at_depth2(cache):
+    p1 = cache.plan_for("tdenoise-t", 24)
+    p2 = dataclasses.replace(p1, prefetch_depth=2)
+    m1 = perf_model.predict(p1, 24)
+    m2 = perf_model.predict(p2, 24)
+    assert m2.prefetch_depth == 2
+    assert m2.cycles_per_frame == m2.fill_cycles + max(
+        m2.steady_cycles_per_frame, m2.dma_cycles_per_frame)
+    assert m2.cycles_per_frame < m1.cycles_per_frame
+    # overlap hides the shorter engine entirely; the bound label and the
+    # per-engine cycle counts are depth-invariant
+    assert (m1.dma_cycles_per_frame, m1.steady_cycles_per_frame) == \
+        (m2.dma_cycles_per_frame, m2.steady_cycles_per_frame)
+    assert m1.bound == m2.bound == "dma"
+    # compute-bound pipelines gain nothing but the fill either way
+    c1 = perf_model.predict(cache.plan_for("unsharp-m", 24), 24)
+    c2 = perf_model.predict(dataclasses.replace(
+        cache.plan_for("unsharp-m", 24), prefetch_depth=2), 24)
+    assert c2.cycles_per_frame == c2.fill_cycles + c2.steady_cycles_per_frame
+    assert c1.cycles_per_frame - c2.cycles_per_frame == c1.dma_cycles_per_frame
+
+
+def test_model_classifies_ties_as_dma(cache):
+    """tunsharp-t streams exactly as many DMA cycles as compute cycles;
+    ties classify dma (matching measure.classify) so the dse axis still
+    offers overlap when it exactly breaks even."""
+    m = perf_model.predict(cache.plan_for("tunsharp-t", 24), 24)
+    assert m.dma_cycles_per_frame == m.steady_cycles_per_frame
+    assert m.bound == "dma"
